@@ -1,0 +1,77 @@
+"""Microbenchmarks for the Pallas kernels (interpret mode on CPU — the
+numbers are semantics-validation throughput, not TPU wall-times; on TPU
+the same call sites run compiled) and their pure-jnp oracles (the oracle
+time is the meaningful CPU number)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cong import CongState
+from repro.core.tables import bootstrap_tables
+from repro.kernels import ops, ref
+
+Row = Tuple[str, float, str]
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def decide_bench() -> List[Row]:
+    F, P = 4096, 6
+    k = jax.random.key(0)
+    k1, k2, k3 = jax.random.split(k, 3)
+    fids = jax.random.randint(k1, (F,), 0, 1 << 30).astype(jnp.uint32)
+    cp = jax.random.randint(k2, (F, P), 0, 256).astype(jnp.int32)
+    cc = jax.random.randint(k3, (F, P), 0, 256).astype(jnp.int32)
+    valid = jnp.ones((F, P), bool)
+    us_ref, _ = _time(lambda *a: ref.lcmp_decide_ref(*a), fids, cp, cc, valid)
+    us_k, _ = _time(lambda *a: ops.lcmp_decide(*a), fids, cp, cc, valid)
+    return [
+        ("kernel/lcmp_decide_ref_4096flows", us_ref,
+         f"ns_per_decision={us_ref*1e3/F:.1f}"),
+        ("kernel/lcmp_decide_pallas_interp", us_k,
+         f"ns_per_decision={us_k*1e3/F:.1f}"),
+    ]
+
+
+def cong_bench() -> List[Row]:
+    n = 1024
+    tb = bootstrap_tables([100] * n)
+    st = CongState.init(n)
+    q = jnp.arange(n, dtype=jnp.int32) * 1000
+    us_ref, _ = _time(lambda s: ref.cong_update_ref(s, q, 0, tb), st)
+    us_k, _ = _time(lambda s: ops.cong_update(s, q, 0, tb), st)
+    return [
+        ("kernel/cong_update_ref_1024ports", us_ref,
+         f"ns_per_port={us_ref*1e3/n:.1f}"),
+        ("kernel/cong_update_pallas_interp", us_k,
+         f"ns_per_port={us_k*1e3/n:.1f}"),
+    ]
+
+
+def qsr_bench() -> List[Row]:
+    n = 1 << 20
+    x = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+    bits = jax.random.bits(jax.random.key(2), (n,), jnp.uint32)
+    us_ref, _ = _time(lambda *a: ref.qsr_int8_ref(*a), x, bits)
+    us_k, _ = _time(lambda *a: ops.qsr_int8(*a), x, bits)
+    gbps = n * 4 / (us_ref / 1e6) / 1e9
+    return [
+        ("kernel/qsr_int8_ref_1M", us_ref, f"GBps={gbps:.2f}"),
+        ("kernel/qsr_int8_pallas_interp_1M", us_k, "4x_compression"),
+    ]
+
+
+def all_benches() -> List[Row]:
+    return decide_bench() + cong_bench() + qsr_bench()

@@ -1,0 +1,56 @@
+"""Benchmark harness — one entry per paper table/figure plus kernel
+microbenchmarks. Prints ``name,us_per_call,derived`` CSV.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run              # default scale
+    PYTHONPATH=src python -m benchmarks.run --scale quick
+    PYTHONPATH=src python -m benchmarks.run --only fig5,kernels
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="default",
+                    choices=["quick", "default", "full"])
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig1,fig5,fig6,fig7_8,"
+                         "fig9,fig10,fig11,failover,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import figures, kernel_bench
+
+    suites = {
+        "fig1": lambda: figures.fig1_link_utilization(args.scale),
+        "fig5": lambda: figures.fig5_testbed_fct(args.scale),
+        "fig6": lambda: figures.fig6_fidelity(args.scale),
+        "fig7_8": lambda: figures.fig7_8_large_scale(args.scale),
+        "fig9": lambda: figures.fig9_workloads(args.scale),
+        "fig10": lambda: figures.fig10_cc_orthogonality(args.scale),
+        "fig11": lambda: figures.fig11_ablations(args.scale),
+        "failover": lambda: figures.failover_bench(args.scale),
+        "kernels": kernel_bench.all_benches,
+    }
+    wanted = [s for s in args.only.split(",") if s] or list(suites)
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name in wanted:
+        try:
+            for row, us, derived in suites[name]():
+                print(f"{row},{us:.0f},{derived}")
+                sys.stdout.flush()
+        except Exception:
+            ok = False
+            traceback.print_exc()
+            print(f"{name},0,ERROR")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

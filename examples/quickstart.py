@@ -1,0 +1,31 @@
+"""Quickstart: train a small LM end-to-end with checkpoint/resume, then
+decode from it. Runs on CPU in ~a minute.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import subprocess
+import sys
+import tempfile
+
+ck = tempfile.mkdtemp(prefix="repro-ck-")
+
+# 1) train 30 steps, checkpointing every 10
+subprocess.run([sys.executable, "-m", "repro.launch.train",
+                "--arch", "qwen3_4b", "--smoke", "--steps", "30",
+                "--batch", "4", "--seq", "64", "--ckpt", ck,
+                "--ckpt-every", "10", "--log-every", "5"],
+               check=True)
+
+# 2) kill/restart: resume from step 30 checkpoint and continue to 40
+subprocess.run([sys.executable, "-m", "repro.launch.train",
+                "--arch", "qwen3_4b", "--smoke", "--steps", "40",
+                "--batch", "4", "--seq", "64", "--ckpt", ck,
+                "--resume", "--log-every", "5"],
+               check=True)
+
+# 3) serve a few tokens
+subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                "--arch", "qwen3_4b", "--smoke", "--batch", "2",
+                "--prompt-len", "16", "--gen", "16"],
+               check=True)
+print("quickstart OK")

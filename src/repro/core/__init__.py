@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution: LCMP cost-fusion routing.
+
+Public API:
+  tables     : control-plane bootstrap vectors (Fig. 3)
+  pathq      : Alg. 1/2 + Eq. 2 path-quality scores
+  cong       : Q/T/D on-switch congestion estimator (Eqs. 3-5)
+  select     : Eq. 1 fused cost + diversity-preserving selection (§3.4)
+  flowcache  : per-flow stickiness, GC, lazy fast-failover
+  switchd    : the composed DCI switch state machine (Fig. 2)
+  baselines  : ECMP / WCMP / UCMP / RedTE-like comparison policies
+"""
+from repro.core.tables import SwitchTables, bootstrap_tables, level_score_table
+from repro.core.pathq import PathQParams, calc_delay_cost, calc_linkcap_cost, calc_path_quality
+from repro.core.cong import CongParams, CongState, monitor_update, cong_signals, calc_cong_cost
+from repro.core.select import SelectParams, fused_cost, select_egress, ecmp_select, fmix32
+from repro.core.flowcache import FlowCache
+from repro.core.switchd import (SwitchParams, SwitchState, make_switch,
+                                monitor_tick, route_batch, gc_tick,
+                                candidate_costs, set_port_liveness)
+
+__all__ = [
+    "SwitchTables", "bootstrap_tables", "level_score_table",
+    "PathQParams", "calc_delay_cost", "calc_linkcap_cost", "calc_path_quality",
+    "CongParams", "CongState", "monitor_update", "cong_signals", "calc_cong_cost",
+    "SelectParams", "fused_cost", "select_egress", "ecmp_select", "fmix32",
+    "FlowCache",
+    "SwitchParams", "SwitchState", "make_switch", "monitor_tick",
+    "route_batch", "gc_tick", "candidate_costs", "set_port_liveness",
+]

@@ -1,0 +1,102 @@
+"""Routing baselines the paper compares against (§6.1): ECMP, WCMP, UCMP,
+and a RedTE-like coarse-timescale distributed-TE policy.
+
+Each baseline shares the signature
+    ``choose(flow_ids, path_delay_us, path_cap_gbps, valid, **state) -> idx``
+so the simulator can swap policies with one config string.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.select import ecmp_select, fmix32
+
+_BIG = jnp.int32(1 << 30)
+
+
+def ecmp(flow_ids, path_delay_us, path_cap_gbps, valid):
+    """Oblivious equal-cost hashing over all candidates (RFC 2992)."""
+    del path_delay_us, path_cap_gbps
+    return ecmp_select(flow_ids, valid)
+
+
+def _weighted_hash(flow_ids, weights, valid):
+    """Pick candidate i with probability weight_i / sum(weights) using a
+    deterministic per-flow hash (integer cumulative-threshold trick)."""
+    w = jnp.where(valid, jnp.maximum(jnp.asarray(weights, jnp.int32), 1), 0)
+    F = jnp.asarray(flow_ids).shape[0]
+    w = jnp.broadcast_to(w, (F,) + w.shape[-1:])
+    cum = jnp.cumsum(w, axis=-1)
+    total = cum[:, -1]
+    h = ((fmix32(flow_ids) >> 1).astype(jnp.int32) % jnp.maximum(total, 1))
+    choice = (cum <= h[:, None]).sum(-1).astype(jnp.int32)
+    return jnp.where(total > 0, choice, -1)
+
+
+def wcmp(flow_ids, path_delay_us, path_cap_gbps, valid):
+    """WCMP: static weights proportional to provisioned capacity."""
+    del path_delay_us
+    return _weighted_hash(flow_ids, path_cap_gbps, valid)
+
+
+def ucmp(flow_ids, path_delay_us, path_cap_gbps, valid,
+         wait_cost_us: int = 0):
+    """UCMP-style uniform cost (SIGCOMM'24, reconfigurable DCNs): unify a
+    circuit-wait term with transmission capacity into one cost and take the
+    cheapest. In a conventional WAN the wait term is ~0, so the cost
+    degenerates to 1/capacity — exactly the capacity-centric bias Fig. 1
+    demonstrates (concentrates on fat-but-slow links, ignores delay).
+    Ties are hashed for determinism."""
+    del path_delay_us
+    cap = jnp.maximum(jnp.asarray(path_cap_gbps, jnp.int32), 1)
+    cost = wait_cost_us + (jnp.int32(1_000_000) // cap)   # integer 1/cap scale
+    cost = jnp.where(jnp.asarray(valid, bool), cost, _BIG)
+    F = jnp.asarray(flow_ids).shape[0]
+    cost = jnp.broadcast_to(cost, (F,) + cost.shape[-1:])
+    P = cost.shape[-1]
+    # deterministic tie-break by per-flow hashed rotation
+    rot = (fmix32(flow_ids) % jnp.uint32(P)).astype(jnp.int32)
+    idx = (jnp.arange(P, dtype=jnp.int32)[None, :] + rot[:, None]) % P
+    rot_cost = jnp.take_along_axis(cost, idx, axis=-1)
+    best = jnp.argmin(rot_cost, axis=-1).astype(jnp.int32)
+    choice = jnp.take_along_axis(idx, best[:, None], axis=-1)[:, 0]
+    any_valid = jnp.asarray(valid, bool).sum(-1) > 0
+    return jnp.where(any_valid, choice, -1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RedTEState:
+    """Coarse-timescale split ratios, re-optimized every ``period_us``.
+
+    RedTE (SIGCOMM'24) learns per-router split ratios with a ~100 ms
+    control loop; the paper observes that at RDMA micro-burst timescales
+    it degenerates toward static hashing. We model the control loop
+    faithfully at the *timescale* level: every period the ratios move
+    toward inverse recent-utilization (the optimizer's fixed point),
+    between updates the ratios are static weights for hashing."""
+    weights: jnp.ndarray       # (P,) int32 current split weights
+    last_update_us: jnp.ndarray  # () int32
+
+    @classmethod
+    def init(cls, num_paths: int) -> "RedTEState":
+        return cls(weights=jnp.ones((num_paths,), jnp.int32),
+                   last_update_us=jnp.asarray(-(1 << 30), jnp.int32))
+
+
+def redte_update(state: RedTEState, now_us, path_util_q8: jnp.ndarray,
+                 period_us: int = 100_000) -> RedTEState:
+    """Periodic re-optimization: weight_i ∝ headroom = (256 - util_q8)."""
+    due = (jnp.asarray(now_us, jnp.int32) - state.last_update_us) >= period_us
+    headroom = jnp.maximum(256 - jnp.asarray(path_util_q8, jnp.int32), 1)
+    new_w = jnp.where(due, headroom, state.weights)
+    new_t = jnp.where(due, jnp.asarray(now_us, jnp.int32), state.last_update_us)
+    return RedTEState(weights=new_w, last_update_us=new_t)
+
+
+def redte(flow_ids, path_delay_us, path_cap_gbps, valid, state: RedTEState):
+    del path_delay_us, path_cap_gbps
+    return _weighted_hash(flow_ids, state.weights, valid)

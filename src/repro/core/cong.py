@@ -1,0 +1,118 @@
+"""Realtime on-switch congestion estimator (paper §3.3).
+
+Per egress port the switch keeps five registers (paper §4 storage
+accounting: queueCur, queuePrev, trend, durCnt, lastSample = 24 B/port).
+A lightweight monitor samples queue depth at a modest cadence and derives
+three 8-bit signals:
+
+- Q : instantaneous queue level  (qThresh lookup -> levelScore)
+- T : short-term trend           (shift-based EWMA, Eq. 3, normalized by
+                                  per-rate trend thresholds; <=0 -> 0)
+- D : duration/persistence       (counter, +1 above high-water Q level,
+                                  halves otherwise; right-shifted)
+
+``C_cong = min((w_ql*Q + w_tl*T + w_dp*D) >> S_cong, 255)``   (Eqs. 4-5)
+
+Everything is int32 and shift-based — bit-compatible with the 32-bit
+switch registers the paper budgets. Queue depths are in 1 KiB *cells*
+(see tables.py). State is a struct-of-arrays over ports so one call
+updates a whole switch (or a fleet, with a leading switch axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tables import SCORE_MAX, SwitchTables
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CongParams:
+    """Integer weights/shifts. Defaults = paper §7.4 recommended (2,1,1)."""
+    w_ql: int = dataclasses.field(default=2, metadata=dict(static=True))
+    w_tl: int = dataclasses.field(default=1, metadata=dict(static=True))
+    w_dp: int = dataclasses.field(default=1, metadata=dict(static=True))
+    ewma_k: int = dataclasses.field(default=3, metadata=dict(static=True))   # Eq. 3 K
+    dur_shift: int = dataclasses.field(default=2, metadata=dict(static=True))
+
+    @property
+    def s_cong(self) -> int:
+        total = self.w_ql + self.w_tl + self.w_dp
+        return max(total - 1, 0).bit_length()
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CongState:
+    """Per-port registers (struct-of-arrays, shape (..., num_ports))."""
+    queue_cur: jnp.ndarray    # int32 cells   (last sampled)
+    queue_prev: jnp.ndarray   # int32 cells   (previous sample)
+    trend: jnp.ndarray        # int32 EWMA accumulator (cells/interval)
+    dur_cnt: jnp.ndarray      # int32 persistence counter
+    last_sample: jnp.ndarray  # int32 microseconds
+
+    @classmethod
+    def init(cls, num_ports: int, shape=()) -> "CongState":
+        s = tuple(shape) + (num_ports,)
+        z = jnp.zeros(s, jnp.int32)
+        return cls(queue_cur=z, queue_prev=z, trend=z, dur_cnt=z, last_sample=z)
+
+
+def _searchsorted_rows(thresh: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise searchsorted: thresh (..., B), x (...,) -> level counts."""
+    return (thresh <= x[..., None]).sum(-1).astype(jnp.int32)
+
+
+def monitor_update(state: CongState, queue_cells: jnp.ndarray, now_us: jnp.ndarray,
+                   tables: SwitchTables, params: CongParams = CongParams()) -> CongState:
+    """One monitor pass (paper workflow step 1 "Refresh congestion state").
+
+    ``queue_cells`` are the freshly sampled per-port egress queue depths
+    (1 KiB cells). Trend normalization uses the observed sampling interval
+    implicitly: the EWMA accumulates per-sample deltas, and the per-rate
+    ``trend_thresh`` tables were built for the nominal cadence; modest
+    cadence jitter shifts levels by at most one (paper: "robust to modest
+    variations in sampling frequency").
+    """
+    q = jnp.asarray(queue_cells, jnp.int32)
+    delta = q - state.queue_cur
+    k = params.ewma_k
+    # Eq. (3): T = T_old - (T_old >> K) + (delta >> K)  (arithmetic shifts)
+    trend = state.trend - jnp.right_shift(state.trend, k) + jnp.right_shift(delta, k)
+
+    q_level = _searchsorted_rows(tables.q_thresh, q)
+    above = q_level >= tables.high_water_level
+    dur = jnp.where(above, state.dur_cnt + 1, jnp.right_shift(state.dur_cnt, 1))
+
+    return CongState(
+        queue_cur=q,
+        queue_prev=state.queue_cur,
+        trend=trend,
+        dur_cnt=dur.astype(jnp.int32),
+        last_sample=jnp.broadcast_to(jnp.asarray(now_us, jnp.int32),
+                                     state.last_sample.shape),
+    )
+
+
+def cong_signals(state: CongState, tables: SwitchTables,
+                 params: CongParams = CongParams()):
+    """Derive the quantized (Q, T, D) score triple from current registers."""
+    q_level = _searchsorted_rows(tables.q_thresh, state.queue_cur)
+    q_score = tables.level_score[q_level]
+
+    t_level = _searchsorted_rows(tables.trend_thresh, state.trend)
+    t_score = jnp.where(state.trend > 0, tables.level_score[t_level], 0)
+
+    d_score = jnp.minimum(jnp.right_shift(state.dur_cnt, params.dur_shift), SCORE_MAX)
+    return q_score.astype(jnp.int32), t_score.astype(jnp.int32), d_score.astype(jnp.int32)
+
+
+def calc_cong_cost(state: CongState, tables: SwitchTables,
+                   params: CongParams = CongParams()) -> jnp.ndarray:
+    """Eqs. (4)-(5): fused, normalized per-port C_cong in [0, 255]."""
+    q, t, d = cong_signals(state, tables, params)
+    fused = params.w_ql * q + params.w_tl * t + params.w_dp * d
+    return jnp.minimum(jnp.right_shift(fused, params.s_cong), SCORE_MAX).astype(jnp.int32)

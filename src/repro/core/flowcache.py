@@ -1,0 +1,106 @@
+"""Bounded flow cache: per-flow path stickiness + GC + lazy fast-failover.
+
+Paper §3.1.2 (4)/(5) and §3.4:
+- entry = (flowId, outDevIdx, lastSeen); only the *first* packet of a flow
+  runs the full cost computation, later packets hit the cache and refresh
+  lastSeen (in-order delivery for RDMA).
+- periodic GC evicts entries idle past a timeout, keeping the cache bounded.
+- fast-failover is *lazy*: a hit whose egress port is dead is treated as a
+  miss — the entry is overwritten by a fresh decision on the packet path,
+  with zero control-plane involvement (μs-scale recovery).
+
+Implementation: direct-mapped hash cache (slot = fmix32(flow) % capacity)
+as a struct-of-arrays — the functional-JAX equivalent of switch register
+files. Collisions simply overwrite (bounded state, like real hardware).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.select import fmix32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FlowCache:
+    flow_id: jnp.ndarray    # (C,) uint32 — key
+    out_idx: jnp.ndarray    # (C,) int32  — chosen egress/candidate index
+    last_seen: jnp.ndarray  # (C,) int32  — microseconds
+    valid: jnp.ndarray      # (C,) bool
+
+    @classmethod
+    def init(cls, capacity: int) -> "FlowCache":
+        return cls(
+            flow_id=jnp.zeros((capacity,), jnp.uint32),
+            out_idx=jnp.full((capacity,), -1, jnp.int32),
+            last_seen=jnp.zeros((capacity,), jnp.int32),
+            valid=jnp.zeros((capacity,), bool),
+        )
+
+    @property
+    def capacity(self) -> int:
+        return self.flow_id.shape[0]
+
+
+def _slot(cache: FlowCache, flow_ids: jnp.ndarray) -> jnp.ndarray:
+    return (fmix32(flow_ids) % jnp.uint32(cache.capacity)).astype(jnp.int32)
+
+
+def lookup(cache: FlowCache, flow_ids: jnp.ndarray, port_alive: jnp.ndarray):
+    """Vectorized lookup. Returns (hit, out_idx, slot).
+
+    A hit requires: slot valid, key match, and the recorded egress still
+    alive — a dead egress makes it a miss (lazy failover re-decision).
+    """
+    flow_ids = jnp.asarray(flow_ids).astype(jnp.uint32)
+    slot = _slot(cache, flow_ids)
+    key_ok = cache.valid[slot] & (cache.flow_id[slot] == flow_ids)
+    out = cache.out_idx[slot]
+    alive = jnp.asarray(port_alive, bool)[jnp.maximum(out, 0)]
+    hit = key_ok & alive
+    return hit, jnp.where(hit, out, -1), slot
+
+
+def refresh(cache: FlowCache, slot: jnp.ndarray, hit: jnp.ndarray,
+            now_us) -> FlowCache:
+    """Refresh lastSeen for hits (established-flow packet arrival)."""
+    ls = cache.last_seen.at[slot].set(
+        jnp.where(hit, jnp.asarray(now_us, jnp.int32), cache.last_seen[slot]))
+    return dataclasses.replace(cache, last_seen=ls)
+
+
+def insert(cache: FlowCache, flow_ids: jnp.ndarray, out_idx: jnp.ndarray,
+           now_us, do_insert: jnp.ndarray) -> FlowCache:
+    """Record fresh decisions (first packet of each flow). Vectorized;
+    on intra-batch slot collisions the last writer wins (hardware-like)."""
+    flow_ids = jnp.asarray(flow_ids).astype(jnp.uint32)
+    slot = _slot(cache, flow_ids)
+    do = jnp.asarray(do_insert, bool) & (out_idx >= 0)
+    # guard: masked-out lanes write to their own slot's current value
+    cur_id, cur_out = cache.flow_id[slot], cache.out_idx[slot]
+    cur_seen, cur_valid = cache.last_seen[slot], cache.valid[slot]
+    return FlowCache(
+        flow_id=cache.flow_id.at[slot].set(jnp.where(do, flow_ids, cur_id)),
+        out_idx=cache.out_idx.at[slot].set(jnp.where(do, out_idx, cur_out)),
+        last_seen=cache.last_seen.at[slot].set(
+            jnp.where(do, jnp.asarray(now_us, jnp.int32), cur_seen)),
+        valid=cache.valid.at[slot].set(cur_valid | do),
+    )
+
+
+def garbage_collect(cache: FlowCache, now_us, idle_timeout_us) -> FlowCache:
+    """Periodic GC: evict entries idle past the timeout (paper workflow 4)."""
+    fresh = (jnp.asarray(now_us, jnp.int32) - cache.last_seen) <= jnp.asarray(
+        idle_timeout_us, jnp.int32)
+    return dataclasses.replace(cache, valid=cache.valid & fresh)
+
+
+def invalidate_ports(cache: FlowCache, port_alive: jnp.ndarray) -> FlowCache:
+    """Eager variant of failover (control-plane batch invalidation). The
+    production path is the *lazy* one inside ``lookup``; this exists for
+    tests and for operators who prefer eager sweeps."""
+    alive = jnp.asarray(port_alive, bool)[jnp.maximum(cache.out_idx, 0)]
+    return dataclasses.replace(cache, valid=cache.valid & alive)

@@ -1,0 +1,88 @@
+"""Compact control-plane path-quality representation (paper §3.2).
+
+``C_path(p) = min((w_dl * delayScore(p) + w_lc * linkCapScore(p)) >> S_path, 255)``
+
+Both mapping functions are deliberately integer-only:
+
+- Alg. 1 ``CalcDelayCost``      : saturating, shift-based map of one-way
+  propagation delay (microseconds) to 0..255.
+- Alg. 2 ``CalcLinkCapCost``    : capacity-class lookup against the
+  preinstalled threshold vector; *higher* capacity maps to a *lower* cost
+  class so the fused metric prefers fat links.
+
+All functions broadcast over arbitrary leading shapes (paths, flows x
+paths, ...), so the control plane can score the whole path table in one
+call.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tables import SCORE_MAX, level_score_table
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PathQParams:
+    """Integer weights/shifts for Eq. (2). Defaults = paper §7.3 best."""
+    w_dl: int = dataclasses.field(default=3, metadata=dict(static=True))
+    w_lc: int = dataclasses.field(default=1, metadata=dict(static=True))
+    # saturating shift for the delay map: delayScore = min(us >> d_shift, 255).
+    # d_shift=8 saturates at 255*256us ~= 65.3ms (paper: "e.g. 32, 64 ms").
+    d_shift: int = dataclasses.field(default=8, metadata=dict(static=True))
+
+    @property
+    def s_path(self) -> int:
+        # right-shift normalization keeping the fused score inside 8 bits
+        total = self.w_dl + self.w_lc
+        return max(total - 1, 0).bit_length()
+
+
+def calc_delay_cost(delay_us: jnp.ndarray, params: PathQParams = PathQParams()) -> jnp.ndarray:
+    """Alg. 1: saturating shift-based delay -> 0..255 score."""
+    d = jnp.asarray(delay_us, jnp.int32)
+    return jnp.minimum(jnp.right_shift(d, params.d_shift), SCORE_MAX).astype(jnp.int32)
+
+
+def calc_linkcap_cost(cap_gbps: jnp.ndarray, cap_thresh: jnp.ndarray) -> jnp.ndarray:
+    """Alg. 2: link capacity-class lookup -> 0..255 score (fat link = low cost).
+
+    ``cap_thresh`` is the (num_classes-1,) increasing boundary vector; the
+    class index is the count of boundaries <= capacity, and the score is
+    the *inverted* linear level score so the highest class costs 0.
+    """
+    cap = jnp.asarray(cap_gbps, jnp.int32)
+    num_classes = cap_thresh.shape[0] + 1
+    cls = jnp.searchsorted(cap_thresh, cap, side="right").astype(jnp.int32)
+    score_of_class = level_score_table(num_classes)  # 0..255 increasing
+    inv = score_of_class[num_classes - 1 - cls]      # invert: big cap -> small cost
+    return inv.astype(jnp.int32)
+
+
+def calc_path_quality(delay_us: jnp.ndarray, cap_gbps: jnp.ndarray,
+                      cap_thresh: jnp.ndarray,
+                      params: PathQParams = PathQParams()) -> jnp.ndarray:
+    """Eq. (2): fused, normalized C_path in [0, 255]."""
+    ds = calc_delay_cost(delay_us, params)
+    lc = calc_linkcap_cost(cap_gbps, cap_thresh)
+    fused = params.w_dl * ds + params.w_lc * lc
+    return jnp.minimum(jnp.right_shift(fused, params.s_path), SCORE_MAX).astype(jnp.int32)
+
+
+def path_bottleneck_stats(link_delay_us: jnp.ndarray, link_cap_gbps: jnp.ndarray,
+                          path_links: jnp.ndarray, path_len: jnp.ndarray):
+    """Reduce per-link attributes to per-path (delay = sum, cap = min).
+
+    ``path_links``: (P, H) int32 link indices padded with -1;
+    ``path_len``  : (P,) number of valid hops.
+    Control-plane-side helper used when installing the C_path table.
+    """
+    H = path_links.shape[-1]
+    hop_valid = jnp.arange(H)[None, :] < path_len[:, None]
+    safe = jnp.maximum(path_links, 0)
+    d = jnp.where(hop_valid, link_delay_us[safe], 0).sum(-1)
+    c = jnp.where(hop_valid, link_cap_gbps[safe], jnp.iinfo(jnp.int32).max).min(-1)
+    return d.astype(jnp.int32), c.astype(jnp.int32)

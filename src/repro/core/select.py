@@ -1,0 +1,132 @@
+"""Fused cost + diversity-preserving selection (paper §3.1.1 Eq. 1, §3.4).
+
+For a batch of new flows (the simultaneous-arrival case is literally the
+leading axis here) and per-flow candidate sets:
+
+1. ``C(p) = alpha*C_path(p) + beta*C_cong(p)``            (Eq. 1)
+2. sort candidates by fused cost (m <= 8, cheap),
+3. drop the high-cost suffix — keep the lower half,
+4. hash-ECMP *inside* the reduced set (per-flow fmix32 hash so a burst of
+   flows decorrelates even within one vectorized call),
+5. fallback: if every candidate is highly congested, take argmin cost
+   ("pointless randomization among uniformly bad choices").
+
+Invalid candidate slots (padded sets) carry +inf-like sentinel costs and
+are never selected.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tables import SCORE_MAX
+
+_COST_INVALID = jnp.int32(1 << 24)  # sentinel far above any fusable cost
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SelectParams:
+    """Defaults = paper §5/§7: (alpha, beta) = (3, 1); keep lower 50%."""
+    alpha: int = dataclasses.field(default=3, metadata=dict(static=True))
+    beta: int = dataclasses.field(default=1, metadata=dict(static=True))
+    keep_num: int = dataclasses.field(default=2, metadata=dict(static=True))   # keep ceil(m/keep_num): 2 -> lower half
+    cong_fallback: int = dataclasses.field(default=230, metadata=dict(static=True))  # "all highly congested" bar
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """MurmurHash3 finalizer — cheap avalanche for flow IDs (uint32)."""
+    x = jnp.asarray(x).astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def fused_cost(c_path: jnp.ndarray, c_cong: jnp.ndarray,
+               params: SelectParams = SelectParams()) -> jnp.ndarray:
+    """Eq. (1) over broadcastable int32 score arrays."""
+    return (params.alpha * jnp.asarray(c_path, jnp.int32)
+            + params.beta * jnp.asarray(c_cong, jnp.int32))
+
+
+def select_egress(flow_ids: jnp.ndarray, c_path: jnp.ndarray, c_cong: jnp.ndarray,
+                  valid: jnp.ndarray, params: SelectParams = SelectParams(),
+                  weights: jnp.ndarray | None = None):
+    """Two-stage diversity-preserving selection.
+
+    Args:
+      flow_ids: (F,) uint32/int32 flow identifiers (five-tuple hash).
+      c_path:   (F, P) or (P,) per-candidate path-quality scores.
+      c_cong:   (F, P) or (P,) per-candidate congestion scores.
+      valid:    (F, P) or (P,) bool — candidate slot is a real path.
+      weights:  optional (F, P) or (P,) int — when given, the stage-2 hash
+                inside the kept set is *weighted* by these (e.g. link
+                capacities) instead of uniform. This is the BEYOND-PAPER
+                "LCMP-W" variant (see EXPERIMENTS §beyond-paper): uniform
+                hashing sends 1/keep of the *bytes* to the thinnest kept
+                path, which saturates it at high load; capacity weighting
+                equalizes kept-set utilization instead.
+    Returns:
+      choice:   (F,) int32 index into the candidate axis.
+      cost:     (F, P) int32 fused costs (invalid slots = sentinel).
+    """
+    flow_ids = jnp.asarray(flow_ids)
+    F = flow_ids.shape[0]
+    cost = fused_cost(c_path, c_cong, params)
+    cost = jnp.broadcast_to(cost, (F,) + cost.shape[-1:])
+    valid = jnp.broadcast_to(jnp.asarray(valid, bool), cost.shape)
+    c_cong_b = jnp.broadcast_to(jnp.asarray(c_cong, jnp.int32), cost.shape)
+    P = cost.shape[-1]
+
+    cost = jnp.where(valid, cost, _COST_INVALID)
+
+    # stage 1: rank candidates (sort keys carry the original index in the
+    # low bits so ties break deterministically, like a stable ASIC sort)
+    key = cost * P + jnp.arange(P, dtype=jnp.int32)[None, :]
+    order = jnp.argsort(key, axis=-1)                      # (F, P) ascending cost
+
+    num_valid = valid.sum(-1).astype(jnp.int32)            # (F,)
+    keep = jnp.maximum((num_valid + params.keep_num - 1) // params.keep_num, 1)
+
+    # stage 2: hash-ECMP inside the reduced (lowest-cost) prefix
+    h = fmix32(flow_ids)
+    if weights is None:
+        pick_rank = (h % keep.astype(jnp.uint32)).astype(jnp.int32)  # (F,)
+    else:
+        w = jnp.broadcast_to(jnp.asarray(weights, jnp.int32), cost.shape)
+        w_sorted = jnp.take_along_axis(w, order, axis=-1)            # by rank
+        in_keep = jnp.arange(P, dtype=jnp.int32)[None, :] < keep[:, None]
+        w_kept = jnp.where(in_keep, jnp.maximum(w_sorted, 1), 0)
+        cum = jnp.cumsum(w_kept, axis=-1)
+        hv = ((h >> 1).astype(jnp.int32) % jnp.maximum(cum[:, -1], 1))
+        pick_rank = (cum <= hv[:, None]).sum(-1).astype(jnp.int32)
+    hashed_choice = jnp.take_along_axis(order, pick_rank[:, None], axis=-1)[:, 0]
+
+    # fallback: all candidates highly congested -> pure argmin of fused cost
+    min_cong = jnp.where(valid, c_cong_b, SCORE_MAX + 1).min(-1)
+    all_bad = min_cong >= params.cong_fallback
+    argmin_choice = order[:, 0]
+    choice = jnp.where(all_bad, argmin_choice, hashed_choice)
+
+    # degenerate: no valid candidate at all -> report -1
+    choice = jnp.where(num_valid > 0, choice, -1)
+    return choice.astype(jnp.int32), cost
+
+
+def ecmp_select(flow_ids: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Plain ECMP: uniform hash over *all* valid candidates (baseline)."""
+    valid = jnp.asarray(valid, bool)
+    F = jnp.asarray(flow_ids).shape[0]
+    valid = jnp.broadcast_to(valid, (F,) + valid.shape[-1:])
+    P = valid.shape[-1]
+    num_valid = valid.sum(-1).astype(jnp.uint32)
+    # rank -> index map: stable order of valid slots
+    order = jnp.argsort(jnp.where(valid, 0, 1) * P + jnp.arange(P)[None, :], axis=-1)
+    rank = (fmix32(flow_ids) % jnp.maximum(num_valid, 1)).astype(jnp.int32)
+    choice = jnp.take_along_axis(order, rank[:, None], axis=-1)[:, 0]
+    return jnp.where(num_valid > 0, choice, -1).astype(jnp.int32)

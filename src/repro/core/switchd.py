@@ -1,0 +1,118 @@
+"""The full LCMP DCI-switch state machine (paper Fig. 2 runtime workflow).
+
+Composes: bootstrap tables + path-quality table + congestion registers +
+flow cache + two-stage selection into two entry points:
+
+- ``monitor_tick``   : the lightweight monitor pass (refresh Q/T/D).
+- ``route_batch``    : packet/flow arrival processing for a batch —
+    established flows take the cached egress (stickiness), new flows (and
+    flows whose egress died — lazy failover) run the full decision and are
+    inserted into the cache.
+
+The switch is a pure pytree; every transition is functional and jittable,
+so the same object runs inside the netsim `lax.scan`, inside the
+collective scheduler, and inside property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cong as congmod
+from repro.core import flowcache as fc
+from repro.core import select as selmod
+from repro.core.cong import CongParams, CongState
+from repro.core.pathq import PathQParams, calc_path_quality
+from repro.core.select import SelectParams
+from repro.core.tables import SwitchTables
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SwitchState:
+    tables: SwitchTables
+    c_path: jnp.ndarray          # (P,) int32 — installed per-candidate path quality
+    cand_port: jnp.ndarray       # (P,) int32 — egress port of each candidate path
+    cand_valid: jnp.ndarray      # (P,) bool  — candidate installed
+    cong: CongState              # per-*port* congestion registers
+    cache: fc.FlowCache
+    port_alive: jnp.ndarray      # (num_ports,) bool
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchParams:
+    pathq: PathQParams = PathQParams()
+    cong: CongParams = CongParams()
+    select: SelectParams = SelectParams()
+    idle_timeout_us: int = 1_000_000  # flow-cache GC idle timeout
+
+
+def make_switch(tables: SwitchTables, path_delay_us, path_cap_gbps, cand_port,
+                num_ports: int, cache_capacity: int = 4096,
+                params: SwitchParams = SwitchParams()) -> SwitchState:
+    """Bootstrap: control plane installs tables + per-path C_path scores."""
+    c_path = calc_path_quality(path_delay_us, path_cap_gbps,
+                               tables.cap_thresh, params.pathq)
+    cand_port = jnp.asarray(cand_port, jnp.int32)
+    return SwitchState(
+        tables=tables,
+        c_path=c_path,
+        cand_port=cand_port,
+        cand_valid=jnp.ones(cand_port.shape, bool),
+        cong=CongState.init(num_ports),
+        cache=fc.FlowCache.init(cache_capacity),
+        port_alive=jnp.ones((num_ports,), bool),
+    )
+
+
+def monitor_tick(sw: SwitchState, queue_bytes, now_us,
+                 params: SwitchParams = SwitchParams()) -> SwitchState:
+    """Monitor pass: sample per-port queues, update Q/T/D registers."""
+    cong = congmod.monitor_update(sw.cong, queue_bytes, now_us,
+                                  sw.tables, params.cong)
+    return dataclasses.replace(sw, cong=cong)
+
+
+def candidate_costs(sw: SwitchState, params: SwitchParams = SwitchParams()):
+    """Per-candidate (C_path, C_cong, valid) triple (ports -> candidates)."""
+    c_cong_port = congmod.calc_cong_cost(sw.cong, sw.tables, params.cong)
+    c_cong = c_cong_port[sw.cand_port]
+    valid = sw.cand_valid & sw.port_alive[sw.cand_port]
+    return sw.c_path, c_cong, valid
+
+
+def route_batch(sw: SwitchState, flow_ids: jnp.ndarray, now_us,
+                params: SwitchParams = SwitchParams()):
+    """Process a batch of packet arrivals; returns (sw', candidate_idx, is_new).
+
+    Established flows (cache hit + live egress) keep their path; everyone
+    else runs the full LCMP decision. The returned index is into the
+    switch's candidate-path table.
+    """
+    flow_ids = jnp.asarray(flow_ids).astype(jnp.uint32)
+    # candidate -> port liveness feeds the lazy-failover lookup: the cache
+    # stores *candidate* indices, so a candidate is "alive" iff its port is.
+    cand_alive = sw.port_alive[sw.cand_port] & sw.cand_valid
+    hit, cached_idx, slot = fc.lookup(sw.cache, flow_ids, cand_alive)
+    cache = fc.refresh(sw.cache, slot, hit, now_us)
+
+    c_path, c_cong, valid = candidate_costs(sw, params)
+    fresh_idx, _ = selmod.select_egress(flow_ids, c_path, c_cong, valid,
+                                        params.select)
+    choice = jnp.where(hit, cached_idx, fresh_idx)
+    cache = fc.insert(cache, flow_ids, fresh_idx, now_us, ~hit)
+    return dataclasses.replace(sw, cache=cache), choice, ~hit
+
+
+def gc_tick(sw: SwitchState, now_us,
+            params: SwitchParams = SwitchParams()) -> SwitchState:
+    return dataclasses.replace(
+        sw, cache=fc.garbage_collect(sw.cache, now_us, params.idle_timeout_us))
+
+
+def set_port_liveness(sw: SwitchState, port_alive) -> SwitchState:
+    """Data-plane port liveness update (fast-failover input)."""
+    return dataclasses.replace(sw, port_alive=jnp.asarray(port_alive, bool))

@@ -1,0 +1,130 @@
+"""Control-plane bootstrap tables (paper §3.1.2, Fig. 3).
+
+The control plane installs a small set of integer vectors on each DCI
+switch at bootstrap; the data plane then only does lookups + integer
+comparisons. All tables are int32 jnp arrays so they can live in
+switch-register-like JAX state and be gathered at line rate.
+
+Units: queue depths are measured in **cells of 1 KiB** — real switch
+ASICs count buffer cells (not bytes) precisely so the 32-bit registers
+the paper budgets (§4) can cover multi-GB long-haul buffers. 6 GB = ~5.9M
+cells, comfortably int32.
+
+Tables
+------
+- capacity-class thresholds  : N increasing Gbps boundaries -> class index
+- queue thresholds (qThresh) : per-port cell boundaries -> queue level Q
+- levelScore                 : linear level-index -> 0..255 score map
+- trend normalization        : per link-rate bucket, cells/interval
+                               boundaries -> trend level T
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+SCORE_MAX = 255          # all scores are 8-bit quantities (paper: 0-255)
+CELL_BYTES = 1024        # queue accounting granularity (1 cell = 1 KiB)
+
+
+def bytes_to_cells(b) -> jnp.ndarray:
+    """Bytes -> int32 cells (floor). Accepts python ints or float arrays."""
+    if isinstance(b, (int, float)):
+        return jnp.int32(int(b) // CELL_BYTES)
+    return (jnp.asarray(b, jnp.float32) / CELL_BYTES).astype(jnp.int32)
+
+
+def level_score_table(num_levels: int) -> jnp.ndarray:
+    """Precomputed linear mapping from level index to a 0-255 score.
+
+    Paper §3.1.2: "A linear mapping from level index to a 0-255 score is
+    precomputed. This avoids per-packet floating computation."
+    """
+    if num_levels < 2:
+        return jnp.zeros((max(num_levels, 1),), jnp.int32)
+    idx = jnp.arange(num_levels, dtype=jnp.int32)
+    return (idx * SCORE_MAX) // (num_levels - 1)
+
+
+def capacity_class_thresholds(max_capacity_gbps: int, num_classes: int = 10) -> jnp.ndarray:
+    """Increasing link-capacity thresholds (Gbps), proportional to a
+    configured maximum capacity (paper: "each class boundary is
+    proportional to a configured link capacity")."""
+    cls = jnp.arange(1, num_classes, dtype=jnp.int32)
+    return (cls * max_capacity_gbps) // num_classes  # (num_classes-1,) boundaries
+
+
+def queue_thresholds(buffer_bytes: int, num_levels: int = 16) -> jnp.ndarray:
+    """Per-port egress-buffer cell boundaries mapping queue cells -> level.
+
+    Exponential (doubling) ladder: the top boundary is the full buffer and
+    each level below halves it. Long-haul buffers are BDP-sized (6 GB,
+    paper §6.2) so a *linear* split would be blind until hundreds of MB
+    queue up; the doubling ladder is fine-grained exactly where "imminent
+    queue buildup" (§2.3-C2) lives, while still covering the whole buffer.
+    Integer-only.
+    """
+    buffer_cells = max(buffer_bytes // CELL_BYTES, num_levels)
+    th = [max(buffer_cells >> (num_levels - 1 - i), 1)
+          for i in range(1, num_levels)]
+    return jnp.asarray(th, jnp.int32)  # (num_levels-1,) increasing
+
+
+def trend_thresholds(link_rate_gbps: int, sample_interval_us: int,
+                     num_levels: int = 16) -> jnp.ndarray:
+    """Per-rate-bucket trend normalization vector (paper §3.1.2).
+
+    The raw trend accumulator is in cells-per-sample-interval units. A
+    trend equal to a large fraction of what the link can move in one
+    interval is "fast growth"; boundaries ramp linearly to 50% of the
+    per-interval line-rate cells.
+    """
+    cells_per_interval = ((link_rate_gbps * 10**9 // 8) * sample_interval_us
+                          // 1_000_000) // CELL_BYTES
+    th = [(i * (cells_per_interval // 2)) // (num_levels - 1)
+          for i in range(1, num_levels)]
+    return jnp.asarray(th, jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SwitchTables:
+    """Everything the control plane installs at bootstrap (Fig. 3)."""
+    cap_thresh: jnp.ndarray      # (num_classes-1,) int32 Gbps boundaries
+    level_score: jnp.ndarray     # (num_levels,)    int32 0..255
+    q_thresh: jnp.ndarray        # (num_levels-1,)  int32 cells
+    trend_thresh: jnp.ndarray    # (num_ports, num_levels-1) int32 per-port
+                                 #   (expanded from per-rate-bucket vectors)
+    high_water_level: jnp.ndarray  # () int32 — D counter arms above this Q level
+
+    @property
+    def num_levels(self) -> int:
+        return self.level_score.shape[0]
+
+
+def bootstrap_tables(port_rates_gbps: Sequence[int], *,
+                     buffer_bytes: int = 6 * 10**9,
+                     sample_interval_us: int = 100,
+                     num_classes: int = 10,
+                     num_levels: int = 16,
+                     max_capacity_gbps: int = 400,
+                     high_water_frac: float = 0.625) -> SwitchTables:
+    """Build the full bootstrap table set for one DCI switch.
+
+    ``port_rates_gbps`` lists the configured rate of each egress port; the
+    per-rate trend tables are materialized per port (the paper stores one
+    per coarse rate bucket and creates missing buckets on demand —
+    expanding per port is the dense-array equivalent).
+    """
+    rates = list(port_rates_gbps)
+    trend = jnp.stack([trend_thresholds(r, sample_interval_us, num_levels) for r in rates])
+    return SwitchTables(
+        cap_thresh=capacity_class_thresholds(max_capacity_gbps, num_classes),
+        level_score=level_score_table(num_levels),
+        q_thresh=queue_thresholds(buffer_bytes, num_levels),
+        trend_thresh=trend,
+        high_water_level=jnp.asarray(int(high_water_frac * (num_levels - 1)), jnp.int32),
+    )

@@ -1,0 +1,44 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (this container) and False on
+real TPU backends — callers can force either. All wrappers share
+signatures with the pure-jnp oracles in ref.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.lcmp_decide import lcmp_decide as _lcmp_decide
+from repro.kernels.cong_update import cong_update as _cong_update
+from repro.kernels.qsr_int8 import qsr_int8 as _qsr_int8, qsr_dequant as _qsr_dequant
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lcmp_decide(flow_ids, c_path, c_cong, valid, params=None, interpret=None):
+    from repro.core.select import SelectParams
+    params = params or SelectParams()
+    interpret = _default_interpret() if interpret is None else interpret
+    if c_path.shape[-1] > 8:     # paper bounds m<=8; larger sets use the oracle
+        return ref.lcmp_decide_ref(flow_ids, c_path, c_cong, valid, params)
+    return _lcmp_decide(flow_ids, c_path, c_cong, valid, params, interpret)
+
+
+def cong_update(state, queue_cells, now_us, tables, params=None, interpret=None):
+    from repro.core.cong import CongParams
+    params = params or CongParams()
+    interpret = _default_interpret() if interpret is None else interpret
+    return _cong_update(state, queue_cells, now_us, tables, params, interpret)
+
+
+def qsr_int8(x, rand_bits, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _qsr_int8(x, rand_bits, interpret)
+
+
+def qsr_dequant(q, scales, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _qsr_dequant(q, scales, interpret)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *reference semantics*; kernels must match them bit-exactly
+(integer paths) or to float tolerance (quantizer). The LCMP decision
+oracle reuses repro.core.select so the kernel is pinned to the very same
+semantics the rest of the framework (netsim, collective scheduler) uses.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cong as congmod
+from repro.core import select as selmod
+from repro.core.cong import CongParams, CongState
+from repro.core.select import SelectParams
+from repro.core.tables import SwitchTables
+
+
+def lcmp_decide_ref(flow_ids: jnp.ndarray, c_path: jnp.ndarray,
+                    c_cong: jnp.ndarray, valid: jnp.ndarray,
+                    params: SelectParams = SelectParams()) -> jnp.ndarray:
+    """(F,), (F,P), (F,P), (F,P) -> (F,) candidate index (-1 if none)."""
+    idx, _ = selmod.select_egress(flow_ids, c_path, c_cong, valid, params)
+    return idx
+
+
+def cong_update_ref(state: CongState, queue_cells: jnp.ndarray, now_us,
+                    tables: SwitchTables, params: CongParams = CongParams()):
+    """Monitor tick + score derivation. Returns (state', c_cong)."""
+    st = congmod.monitor_update(state, queue_cells, now_us, tables, params)
+    return st, congmod.calc_cong_cost(st, tables, params)
+
+
+def qsr_int8_ref(x: jnp.ndarray, rand_bits: jnp.ndarray, block: int = 1024):
+    """Blockwise int8 quantization with stochastic rounding.
+
+    x: (N,) float32 (N multiple of block); rand_bits: (N,) uint32.
+    Returns (q int8 (N,), scales float32 (N/block,)).
+    """
+    n = x.shape[0]
+    xb = x.reshape(n // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = amax / 127.0
+    inv = jnp.where(amax > 0, 127.0 / amax, 0.0)
+    y = xb * inv
+    u = (rand_bits.reshape(n // block, block) >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    q = jnp.clip(jnp.floor(y + u), -127, 127).astype(jnp.int8)
+    return q.reshape(n), scale[:, 0]
+
+
+def qsr_dequant_ref(q: jnp.ndarray, scales: jnp.ndarray, block: int = 1024):
+    n = q.shape[0]
+    return (q.reshape(n // block, block).astype(jnp.float32)
+            * scales[:, None]).reshape(n)

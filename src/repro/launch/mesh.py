@@ -1,0 +1,23 @@
+"""Production mesh builders (see MULTI-POD DRY-RUN spec).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax
+initialization and only then calls it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])

@@ -1,0 +1,158 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+  t_comp = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+  t_mem  = HLO_bytes / (chips x 819e9 B/s HBM)
+  t_coll = wire_bytes_per_chip / 50e9 B/s ICI   (per-link, conservative)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+NOT in cost_analysis: we parse the post-SPMD optimized HLO
+(``compiled.as_text()``) and sum result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, converting
+to per-chip *wire* bytes with the standard ring-algorithm factors:
+  all-reduce      2 (g-1)/g x result bytes
+  all-gather      (g-1)/g x result bytes (result = gathered)
+  reduce-scatter  (g-1)/g x input bytes  (= result x g)
+  all-to-all      (g-1)/g x bytes
+  collective-permute  1 x bytes
+where g = replica-group size parsed per op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_kind_bytes: Dict[str, float]
+    wire_bytes_per_chip: float
+    num_ops: int
+
+    def row(self) -> str:
+        return ";".join(f"{k}={v:.3e}" for k, v in
+                        sorted(self.per_kind_bytes.items()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    per_kind: Dict[str, float] = {}
+    wire = 0.0
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m or "-done(" in line:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(sig)
+        if nbytes == 0:
+            continue
+        g = _group_size(line)
+        if kind == "all-reduce":
+            w = 2.0 * (g - 1) / g * nbytes
+        elif kind == "all-gather":
+            w = (g - 1) / g * nbytes
+        elif kind == "reduce-scatter":
+            w = (g - 1) / g * nbytes * g      # input bytes = result x g
+        elif kind == "all-to-all":
+            w = (g - 1) / g * nbytes
+        else:                                  # collective-permute
+            w = float(nbytes)
+        per_kind[kind] = per_kind.get(kind, 0.0) + nbytes
+        wire += w
+        n_ops += 1
+    return CollectiveStats(per_kind, wire, n_ops)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return 2
+
+
+def _scan_trip_count(hlo_text: str) -> int:
+    """Collectives inside the depth scan execute trip_count times but the
+    HLO lists them once; cost_analysis already multiplies FLOPs by trip
+    count, so we scale collective bytes by the scan trip count too (the
+    dominant while loop)."""
+    trips = [int(t) for t in re.findall(r"trip_count=(\d+)", hlo_text)]
+    return max(trips, default=1)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_wire_bytes: float
+    chips: int
+    t_comp: float
+    t_mem: float
+    t_coll: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+
+    def derived(self) -> str:
+        return (f"t_comp={self.t_comp:.3e}s;t_mem={self.t_mem:.3e}s;"
+                f"t_coll={self.t_coll:.3e}s;bound={self.bottleneck};"
+                f"useful={self.useful_ratio:.2f}")
+
+
+def roofline(cost: dict, coll: CollectiveStats, chips: int,
+             model_flops: float, scan_trips: int = 1) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    wire = coll.wire_bytes_per_chip * scan_trips
+    t_comp = flops / PEAK_FLOPS
+    t_mem = nbytes / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    useful = model_flops / (flops * chips) if flops else 0.0
+    return Roofline(flops=flops, hbm_bytes=nbytes, coll_wire_bytes=wire,
+                    chips=chips, t_comp=t_comp, t_mem=t_mem, t_coll=t_coll,
+                    bottleneck=bound, model_flops=model_flops,
+                    useful_ratio=useful)
+
+
+def model_flops_train(n_active: int, tokens: int) -> float:
+    return 6.0 * n_active * tokens
+
+
+def model_flops_decode(n_active: int, tokens: int) -> float:
+    return 2.0 * n_active * tokens

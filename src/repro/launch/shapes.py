@@ -1,0 +1,78 @@
+"""Assigned input-shape cells and ``input_specs()`` (ShapeDtypeStruct
+stand-ins — weak-type-correct, shardable, no device allocation).
+
+Shapes (LM family):
+  train_4k     seq=4096   global_batch=256   -> train_step
+  prefill_32k  seq=32768  global_batch=32    -> prefill (forward, no bwd)
+  decode_32k   seq=32768(KV) global_batch=128 -> serve_step (1 new token)
+  long_500k    seq=524288(KV) global_batch=1  -> serve_step; SSM/hybrid only
+
+Applicability rules (DESIGN.md §4): long_500k is skipped for pure
+full-attention archs; every arch runs the other three cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.arch import ArchConfig
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+# archs allowed to run long_500k (sub-quadratic / O(1)-state decode)
+LONG_OK = {"zamba2-1.2b", "falcon-mamba-7b"}
+
+
+def applicable(cfg: ArchConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.name in LONG_OK
+    return True
+
+
+def skip_reason(cfg: ArchConfig, shape: str) -> Optional[str]:
+    if applicable(cfg, shape):
+        return None
+    return ("full-attention arch: 500k-context decode requires "
+            "sub-quadratic attention (DESIGN.md §4)")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = cell.batch, cell.seq
+    if cell.kind in ("train", "prefill"):
+        batch = dict(tokens=_sds((B, S), I32), labels=_sds((B, S), I32))
+        if cfg.family == "vlm":
+            batch["extra"] = _sds((B, cfg.n_patches, cfg.d_model), F32)
+        if cfg.family == "encdec":
+            batch["extra"] = _sds((B, cfg.enc_seq, cfg.d_model), F32)
+        return batch
+    # decode: one new token against a seq-sized KV cache
+    from repro.serve.decode import init_cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return dict(tokens=_sds((B, 1), I32),
+                pos=_sds((), I32),
+                cache=cache)

@@ -1,0 +1,288 @@
+"""Model building blocks — pure-jnp, shard-friendly, bf16 activations.
+
+All weights are f32; activations are cast to ``cfg.act_dtype`` (bf16 by
+default) at block entry. Everything is written with einsum so XLA SPMD
+can partition along the named mesh axes given by the spec trees in
+``repro.dist.mesh_rules``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, D). positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq       # (...,S,half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def _softcap(logits, cap: Optional[float]):
+    if cap is None:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+def gqa_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                  softcap: Optional[float] = None, q_offset=0):
+    """q: (B,Sq,Hq,D), k/v: (B,Sk,Hkv,D). Hq % Hkv == 0. Returns (B,Sq,Hq,D).
+
+    ``q_offset`` is the absolute position of q[0] (decode: Sk-1).
+    ``window``: sliding-window size (None = full)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(D).astype(jnp.float32)
+    logits = _softcap(logits, softcap)
+
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def local_block_attention(q, k, v, *, window: int,
+                          softcap: Optional[float] = None):
+    """Sub-quadratic sliding-window attention: keys are gathered from the
+    current and previous block only (block size = window), so cost is
+    O(S * 2W) instead of O(S^2). Exact for window <= block size.
+    q,k,v: (B,S,H*,D) with S % window == 0."""
+    B, S, Hq, D = q.shape
+    _, _, Hkv, _ = k.shape
+    nb = S // window
+    qb = q.reshape(B, nb, window, Hq, D)
+    kb = k.reshape(B, nb, window, Hkv, D)
+    vb = v.reshape(B, nb, window, Hkv, D)
+    # previous block (zero-padded for block 0)
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([kprev, kb], axis=2)        # (B,nb,2W,Hkv,D)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    g = Hq // Hkv
+    qg = qb.reshape(B, nb, window, Hkv, g, D)
+    logits = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qg, k2).astype(jnp.float32)
+    logits = logits / jnp.sqrt(D).astype(jnp.float32)
+    logits = _softcap(logits, softcap)
+    qpos = jnp.arange(window)[:, None] + window       # absolute within 2W
+    kpos = jnp.arange(2 * window)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - window)
+    # block 0 has no previous block: mask the zero-padding
+    first = jnp.arange(2 * window)[None, :] >= window
+    mask0 = mask & first
+    bidx = jnp.arange(nb)
+    m = jnp.where((bidx == 0)[:, None, None], mask0[None], mask[None])
+    logits = jnp.where(m[None, :, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", probs, v2)
+    return out.reshape(B, S, Hq, D)
+
+
+# --------------------------------------------------------------------- mlp
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype)))
+    h = h * jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", h, w_down.astype(x.dtype))
+
+
+# --------------------------------------------------------------------- moe
+# Perf knob (EXPERIMENTS §Perf mixtral iteration 2): when set to a mesh
+# axis name, the dispatch capacity dim is sharded on that axis (expert
+# weights replicated over it) instead of TP-sharding d_ff inside experts.
+# Moves the per-layer all-reduce from the (G,E,C,D) expert outputs to the
+# (G,t,D) combine — ~2.5x fewer collective bytes when E doesn't divide
+# the model axis (mixtral: 8 experts on 16-way TP).
+MOE_CAPACITY_AXIS = None
+
+
+def moe_block(x, router_w, w_gate, w_up, w_down, *, top_k: int,
+              capacity_factor: float = 1.25, group_size: int = 512):
+    """Top-k token-choice MoE with capacity (GShard-style grouped dispatch).
+
+    x: (B,S,D); router_w: (D,E); expert weights: (E,D,F)/(E,F,D).
+    Dispatch/combine via one-hot einsums so the experts axis shards
+    cleanly (EP) and everything stays differentiable.
+
+    Tokens are dispatched within GROUPS of ``group_size`` (GShard): with a
+    single global group the one-hot dispatch tensor is (T, E, C) with
+    C ~ T/E, i.e. O(T^2) memory/compute — at train_4k scale that was a
+    22 TB/device disaster (see EXPERIMENTS.md §Perf iteration 1). Grouped,
+    the dispatch cost is T x E x C_g with C_g ~ group_size/E: linear in T.
+    """
+    B, S, D = x.shape
+    E = router_w.shape[-1]
+    T = B * S
+    gsz = min(group_size, T)
+    G = T // gsz
+    xt = x.reshape(G, gsz, D)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, top_k)            # (G,t,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(capacity_factor * (gsz * top_k) / E) + 1
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.float32)      # (G,t,k,E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                   # pos in expert
+    pos = (pos * onehot).sum(2)                                 # (G,t,E)
+    keep = (pos < cap) & (onehot.sum(2) > 0)                    # (G,t,E)
+    gates_e = (gate_vals[..., None] * onehot).sum(2) * keep     # (G,t,E)
+
+    slot = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=x.dtype)
+    disp = slot * keep[..., None].astype(x.dtype)               # (G,t,E,C)
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xt)                 # (G,E,C,D)
+    if MOE_CAPACITY_AXIS:
+        from jax.sharding import PartitionSpec as _P
+        xe = jax.lax.with_sharding_constraint(
+            xe, _P(None, None, MOE_CAPACITY_AXIS, None))
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w_gate.astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, w_up.astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, w_down.astype(x.dtype))
+
+    comb = disp * gates_e[..., None].astype(x.dtype)            # (G,t,E,C)
+    yt = jnp.einsum("gtec,gecd->gtd", comb, ye)
+    return yt.reshape(B, S, D)
+
+
+# ------------------------------------------------------------------- mamba
+def mamba1_scan(x, p, *, chunk: int = 128):
+    """Mamba-1 (S6) selective scan. x: (B,S,D). Params p: dict with
+    in_proj (D, 2*Di), conv_w (4, Di), x_proj (Di, dt_rank+2*N),
+    dt_proj (dt_rank, Di), A_log (Di, N), D_skip (Di,), out_proj (Di, D).
+    Sequential scan over S in remat'd chunks (TPU: state stays in VMEM).
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    dt_rank = p["dt_proj"].shape[0]
+    Di = p["A_log"].shape[0]
+    N = p["A_log"].shape[1]
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)                           # (B,S,Di)
+    # depthwise causal conv, kernel 4
+    k = p["conv_w"].astype(x.dtype)                             # (4, Di)
+    xpad = jnp.pad(xi, ((0, 0), (3, 0), (0, 0)))
+    xi = sum(xpad[:, i:i + S, :] * k[i] for i in range(4))
+    xi = jax.nn.silu(xi)
+
+    proj = jnp.einsum("bsi,ie->bse", xi, p["x_proj"].astype(x.dtype))
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt,
+                                    p["dt_proj"].astype(x.dtype)))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (Di,N)
+
+    nchunk = S // chunk
+
+    def chunk_step(h, xs):
+        xi_c, dt_c, B_c, C_c = xs      # (B,chunk,...)
+
+        def step(h, s):
+            xi_s, dt_s, B_s, C_s = s
+            dA = jnp.exp(dt_s[..., None] * A)                   # (B,Di,N)
+            dBx = (dt_s * xi_s)[..., None] * B_s[:, None, :]    # (B,Di,N)
+            h = h * dA + dBx
+            y = jnp.einsum("bin,bn->bi", h, C_s)
+            return h, y
+
+        h, ys = jax.lax.scan(
+            step, h, (jnp.moveaxis(xi_c, 1, 0), jnp.moveaxis(dt_c, 1, 0),
+                      jnp.moveaxis(B_c, 1, 0), jnp.moveaxis(C_c, 1, 0)))
+        return h, jnp.moveaxis(ys, 0, 1)                        # (B,chunk,Di)
+
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    xs = tuple(a.reshape(B, nchunk, chunk, -1).swapaxes(0, 1)
+               for a in (xi.astype(jnp.float32), dt.astype(jnp.float32),
+                         Bc.astype(jnp.float32), Cc.astype(jnp.float32)))
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, Di).astype(x.dtype)
+    y = y + xi * p["D_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def mamba2_ssd(x, p, *, chunk: int = 128):
+    """Mamba-2 (SSD) block, chunked dual form. x: (B,S,D). Params:
+    in_proj (D, 2*Di + 2*N + H), conv_w (4, Di+2*N), A_log (H,),
+    D_skip (H,), norm_scale (Di,), out_proj (Di, D). Head dim P = Di/H.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    Di = p["norm_scale"].shape[0]
+    H = p["A_log"].shape[0]
+    P = Di // H
+    N = (p["in_proj"].shape[1] - 2 * Di - H) // 2
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [Di, 2 * Di + 2 * N], axis=-1)
+    k = p["conv_w"].astype(x.dtype)
+    xpad = jnp.pad(xbc, ((0, 0), (3, 0), (0, 0)))
+    xbc = jax.nn.silu(sum(xpad[:, i:i + S, :] * k[i] for i in range(4)))
+    xi, Bc, Cc = jnp.split(xbc, [Di, Di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + 0.0)          # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (H,)
+
+    nb = S // chunk
+    xh = xi.reshape(B, nb, chunk, H, P).astype(jnp.float32)
+    Bh = Bc.reshape(B, nb, chunk, N).astype(jnp.float32)
+    Ch = Cc.reshape(B, nb, chunk, N).astype(jnp.float32)
+    dth = dt.reshape(B, nb, chunk, H)
+
+    dA = dth * A                                                # (B,nb,c,H)
+    cs = jnp.cumsum(dA, axis=2)
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]           # (B,nb,c,c,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    # intra-chunk (quadratic in chunk only)
+    att = jnp.einsum("bncm,bnkm->bnck", Ch, Bh)                 # (B,nb,c,c)
+    att = att[..., None] * L                                    # (B,nb,c,c,H)
+    y_intra = jnp.einsum("bnckh,bnkh,bnkhp->bnchp", att, dth, xh)
+
+    # chunk states + inter-chunk recurrence
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)               # (B,nb,c,H)
+    state = jnp.einsum("bncm,bnch,bnchp->bnhmp",
+                       Bh, dth * decay_to_end, xh)              # (B,nb,H,N,P)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                      # (B,nb,H)
+
+    def inter(h, s):
+        st, dec = s
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    _, h_prev = jax.lax.scan(
+        inter, jnp.zeros((B, H, N, P), jnp.float32),
+        (state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                              # (B,nb,H,N,P)
+    decay_in = jnp.exp(cs)                                      # (B,nb,c,H)
+    y_inter = jnp.einsum("bncm,bnch,bnhmp->bnchp", Ch, decay_in, h_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + xh.reshape(B, S, H, P) * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, Di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))

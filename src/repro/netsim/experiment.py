@@ -1,0 +1,87 @@
+"""One-call experiment driver: topology + workload + policy -> FCT stats.
+
+This is the unit the benchmark harness (one per paper figure) composes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.netsim import fluid, metrics, paths, topo
+from repro.netsim.fluid import SimConfig
+from repro.traffic import cdf as cdfmod
+from repro.traffic.gen import generate
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpSpec:
+    topology: str = "testbed8"       # testbed8 | bso13 | parallel
+    workload: str = "websearch"
+    load: float = 0.3
+    policy: str = "lcmp"
+    cc: str = "dcqcn"
+    duration_us: int = 1_500_000
+    seed: int = 0
+    pairs: str = "dc1dc8"            # dc1dc8 | all | <src>-<dst>
+    cap_scale: float = 0.125
+    select: Optional[object] = None  # optional SelectParams override
+    pathq: Optional[object] = None   # optional PathQParams override
+    congp: Optional[object] = None   # optional CongParams override
+
+
+_TOPOS = {
+    "testbed8": topo.testbed_8dc,
+    "bso13": topo.bso_13dc,
+}
+
+
+def build_experiment(spec: ExpSpec):
+    t = _TOPOS[spec.topology]()
+    pair_list = paths.all_pairs(t)
+    table = paths.build_path_table(t, pair_list)
+    fluid.attach_link_caps(table, t)
+    pidx = table.pair_index()
+
+    if spec.pairs == "dc1dc8":
+        traffic_pairs = [pidx[(0, 7)]]
+    elif spec.pairs == "all":
+        traffic_pairs = [pidx[p] for p in pair_list
+                         if table.pair_ncand[pidx[p]] > 0]
+    else:
+        s, d = spec.pairs.split("-")
+        traffic_pairs = [pidx[(int(s), int(d))]]
+
+    flows = generate(table, cdfmod.WORKLOADS[spec.workload], spec.load,
+                     spec.duration_us, pair_ids=traffic_pairs, seed=spec.seed,
+                     cap_scale=spec.cap_scale)
+
+    kw = {}
+    if spec.select is not None:
+        kw["select"] = spec.select
+    if spec.pathq is not None:
+        kw["pathq"] = spec.pathq
+    if spec.congp is not None:
+        kw["congp"] = spec.congp
+    cfg = SimConfig(policy=spec.policy, cc=spec.cc,
+                    horizon_us=spec.duration_us * 2,   # let tail flows finish
+                    cap_scale=spec.cap_scale, **kw)
+    return t, table, flows, cfg
+
+
+def run_experiment(spec: ExpSpec):
+    t, table, flows, cfg = build_experiment(spec)
+    arrs, state = fluid.build(table, flows, cfg)
+    final = fluid.run(arrs, state, cfg)
+    stats = metrics.fct_stats(final, table, flows, cfg)
+    util = metrics.link_utilization(final, arrs, cfg)
+    return stats, util, (t, table, flows, cfg, final)
+
+
+def compare_policies(base: ExpSpec, policies: Sequence[str]) -> Dict[str, metrics.FCTStats]:
+    out = {}
+    for p in policies:
+        stats, _, _ = run_experiment(dataclasses.replace(base, policy=p))
+        out[p] = stats
+    return out

@@ -1,0 +1,502 @@
+"""Flow-level fluid simulator for inter-DC RDMA routing (the NS-3
+analogue, paper §6), as one jitted ``lax.scan``.
+
+Model (standard fluid FCT-benchmark abstractions):
+- flows arrive (Poisson, CDF-sized), are routed ONCE at arrival (per-flow
+  stickiness — the paper never migrates active flows), start at line rate
+  (RDMA), and share links max-min-proportionally: each link scales the
+  flows through it by ``min(1, cap/offered)`` and a flow sends at its
+  path-min factor — so per-link service never exceeds capacity.
+- per-link byte queues integrate overload ``(offered - cap)+ dt`` and
+  drain otherwise (PFC-lossless: clamped at the 6 GB long-haul buffer,
+  never dropped). Queues contribute waiting time to FCT (at arrival and
+  completion) and are the congestion-signal source.
+- congestion feedback is **RTT-delayed**: rate control reads link signals
+  from ``t - RTT(path)`` via per-link history rings — the paper's
+  "slow and easily outdated feedback" is modeled explicitly.
+- end-host CC is a pluggable rate law (DCQCN / DCTCP / TIMELY / HPCC
+  -like), all reacting to the delayed signals, MD gated once per RTT.
+- the LCMP switch runs inside the loop: per-link Q/T/D registers are
+  refreshed every ``dt`` (the monitor cadence) and new-flow batches run
+  the exact ``repro.core`` decision path — a batch arriving in the same
+  step *is* the paper's simultaneous-arrival herd case.
+
+Everything dynamic lives in ``SimState`` (a pytree); one ``run()`` call
+lowers to a single XLA while-loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import cong as congmod
+from repro.core import select as selmod
+from repro.core.cong import CongParams, CongState
+from repro.core.pathq import PathQParams, calc_path_quality
+from repro.core.select import SelectParams
+from repro.core.tables import CELL_BYTES, bootstrap_tables
+from repro.netsim.paths import PathTable
+from repro.traffic.gen import FlowSet
+
+HIST = 8192          # congestion-history ring (steps); must exceed max RTT
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    policy: str = "lcmp"          # lcmp|ecmp|ucmp|wcmp|redte
+    cc: str = "dcqcn"             # dcqcn|dctcp|timely|hpcc
+    dt_us: int = 200
+    horizon_us: int = 2_000_000
+    cap_scale: float = 0.125      # uniform capacity scale (sim speed knob)
+    buffer_bytes: float = 6e9     # long-haul switch buffer (paper §6.2)
+    ecn_kmin_bytes: float = 4e5   # ECN mark threshold (scaled caps)
+    ai_frac: float = 0.002        # additive increase per step, frac of line
+    md_factor: float = 0.7        # multiplicative decrease
+    redte_period_us: int = 100_000
+    select: SelectParams = SelectParams()
+    pathq: PathQParams = PathQParams()
+    congp: CongParams = CongParams()
+    # optional single-link failure injection
+    fail_link: int = -1
+    fail_at_us: int = -1
+
+    @property
+    def num_steps(self) -> int:
+        return self.horizon_us // self.dt_us
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    # per flow
+    flow_path: jnp.ndarray     # (F,) i32, -1 until routed
+    remaining: jnp.ndarray     # (F,) f32 bytes
+    rate: jnp.ndarray          # (F,) f32 bytes/us
+    active: jnp.ndarray        # (F,) bool
+    done: jnp.ndarray          # (F,) bool
+    fct_us: jnp.ndarray        # (F,) f32
+    extra_wait: jnp.ndarray    # (F,) f32 queue-wait component
+    rtt_steps: jnp.ndarray     # (F,) i32
+    last_dec: jnp.ndarray      # (F,) i32 step of last MD
+    cc_alpha: jnp.ndarray      # (F,) f32 (DCTCP EWMA)
+    cc_target: jnp.ndarray     # (F,) f32 (DCQCN target rate / fast recovery)
+    prev_delay: jnp.ndarray    # (F,) f32 (TIMELY gradient)
+    # per link
+    q_bytes: jnp.ndarray       # (L,) f32
+    hist_q: jnp.ndarray        # (L, HIST) f32 queue bytes
+    hist_u: jnp.ndarray        # (L, HIST) f32 utilization
+    u_ewma: jnp.ndarray        # (L,) f32
+    link_alive: jnp.ndarray    # (L,) bool
+    serv_bytes: jnp.ndarray    # (L,) f32 served-byte counter (metrics)
+    cong: CongState            # LCMP per-link registers
+    c_cong: jnp.ndarray        # (L,) i32 current LCMP congestion score
+    redte_w: jnp.ndarray       # (NPAIR, K) i32 split weights
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimArrays:
+    """Static (non-scanned) device arrays."""
+    link_cap: jnp.ndarray      # (L,) f32 bytes/us (scaled)
+    link_cap_gbps: jnp.ndarray # (L,) i32 (unscaled, for tables)
+    path_links: jnp.ndarray    # (NP, H) i32
+    path_prop: jnp.ndarray     # (NP,) i32 us
+    path_cap: jnp.ndarray      # (NP,) f32 bytes/us (scaled bottleneck)
+    path_cap_gbps: jnp.ndarray # (NP,) i32
+    path_first: jnp.ndarray    # (NP,) i32
+    c_path: jnp.ndarray        # (NP,) i32 — control-plane installed score
+    pair_cand: jnp.ndarray     # (NPAIR, K) i32
+    arrivals: jnp.ndarray      # (T, A) i32 flow idx, -1 pad
+    f_arr_us: jnp.ndarray      # (F,) f32
+    f_size: jnp.ndarray        # (F,) f32
+    f_pair: jnp.ndarray        # (F,) i32
+    f_id: jnp.ndarray          # (F,) u32
+    tables: object             # SwitchTables
+
+
+def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
+    """Pack numpy tables + flows into device arrays and init state."""
+    # links
+    from repro.netsim.topo import Topology  # noqa: F401 (doc only)
+    link_cap_gbps = _infer_link_caps(table)
+    L = len(link_cap_gbps)
+    link_cap = jnp.asarray(link_cap_gbps * 125.0 * cfg.cap_scale, jnp.float32)
+
+    # the whole simulated world is capacity-scaled, so the switch tables
+    # (trend normalization = cells per interval at line rate) and buffers
+    # scale identically — timescales are then invariant under cap_scale.
+    tb = bootstrap_tables([max(int(c * cfg.cap_scale), 1) for c in link_cap_gbps],
+                          buffer_bytes=max(int(cfg.buffer_bytes * cfg.cap_scale),
+                                           1 << 20),
+                          sample_interval_us=cfg.dt_us)
+    c_path = calc_path_quality(jnp.asarray(table.path_prop_us),
+                               jnp.asarray(table.path_cap),
+                               tb.cap_thresh, cfg.pathq)
+
+    # arrivals bucketed by step
+    T = cfg.num_steps
+    step = np.minimum(flows.arrival_us // cfg.dt_us, T - 1).astype(np.int64)
+    counts = np.bincount(step, minlength=T)
+    A = max(int(counts.max()), 1)
+    arrivals = np.full((T, A), -1, np.int32)
+    slot = np.zeros(T, np.int64)
+    for i, s in enumerate(step):
+        arrivals[s, slot[s]] = i
+        slot[s] += 1
+
+    arr = SimArrays(
+        link_cap=link_cap,
+        link_cap_gbps=jnp.asarray(link_cap_gbps, jnp.int32),
+        path_links=jnp.asarray(table.path_links),
+        path_prop=jnp.asarray(table.path_prop_us),
+        path_cap=jnp.asarray(table.path_cap * 125.0 * cfg.cap_scale, jnp.float32),
+        path_cap_gbps=jnp.asarray(table.path_cap),
+        path_first=jnp.asarray(table.path_first),
+        c_path=c_path,
+        pair_cand=jnp.asarray(table.pair_cand),
+        arrivals=jnp.asarray(arrivals),
+        f_arr_us=jnp.asarray(flows.arrival_us, jnp.float32),
+        f_size=jnp.asarray(flows.size_bytes, jnp.float32),
+        f_pair=jnp.asarray(flows.pair_id),
+        f_id=jnp.asarray(flows.flow_id),
+        tables=tb,
+    )
+    F = flows.num_flows
+    NPAIR, K = table.pair_cand.shape
+    state = SimState(
+        flow_path=jnp.full((F,), -1, jnp.int32),
+        remaining=jnp.zeros((F,), jnp.float32),
+        rate=jnp.zeros((F,), jnp.float32),
+        active=jnp.zeros((F,), bool),
+        done=jnp.zeros((F,), bool),
+        fct_us=jnp.zeros((F,), jnp.float32),
+        extra_wait=jnp.zeros((F,), jnp.float32),
+        rtt_steps=jnp.ones((F,), jnp.int32),
+        last_dec=jnp.full((F,), -(1 << 20), jnp.int32),
+        cc_alpha=jnp.zeros((F,), jnp.float32),
+        cc_target=jnp.zeros((F,), jnp.float32),
+        prev_delay=jnp.zeros((F,), jnp.float32),
+        q_bytes=jnp.zeros((L,), jnp.float32),
+        hist_q=jnp.zeros((L, HIST), jnp.float32),
+        hist_u=jnp.zeros((L, HIST), jnp.float32),
+        u_ewma=jnp.zeros((L,), jnp.float32),
+        link_alive=jnp.ones((L,), bool),
+        serv_bytes=jnp.zeros((L,), jnp.float32),
+        cong=CongState.init(L),
+        c_cong=jnp.zeros((L,), jnp.int32),
+        redte_w=jnp.ones((NPAIR, K), jnp.int32),
+    )
+    return arr, state
+
+
+def _infer_link_caps(table: PathTable) -> np.ndarray:
+    """Recover per-link capacities from path hop data (bottleneck-safe:
+    every link appears in some path with its true cap recorded at build
+    time via topo arrays — we stash them on the table)."""
+    if hasattr(table, "_link_caps"):
+        return table._link_caps  # set by attach_link_caps
+    raise ValueError("call attach_link_caps(table, topo) before build()")
+
+
+def attach_link_caps(table: PathTable, topo) -> PathTable:
+    _, _, cap, _ = topo.arrays()
+    object.__setattr__(table, "_link_caps", cap.astype(np.float32))
+    return table
+
+
+# --------------------------------------------------------------------- step
+def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
+    """Decide paths for the batch of flows arriving this step."""
+    idx = ar.arrivals[t]                        # (A,)
+    is_flow = idx >= 0
+    fidx = jnp.maximum(idx, 0)
+    pair = ar.f_pair[fidx]                      # (A,)
+    cand = ar.pair_cand[pair]                   # (A, K)
+    cand_ok = cand >= 0
+    cpad = jnp.maximum(cand, 0)
+
+    # candidate liveness: every hop of the path must be alive
+    hop = ar.path_links[cpad]                                   # (A,K,H)
+    hop_alive = jnp.where(hop >= 0, st.link_alive[jnp.maximum(hop, 0)], True)
+    alive = hop_alive.all(-1)
+    valid = cand_ok & alive
+
+    fid = ar.f_id[fidx]
+    c_path = ar.c_path[cpad]
+    c_cong = st.c_cong[ar.path_first[cpad]]
+    delay = ar.path_prop[cpad]
+    capg = ar.path_cap_gbps[cpad]
+
+    if cfg.policy == "lcmp":
+        k_idx, _ = selmod.select_egress(fid, c_path, c_cong, valid, cfg.select)
+    elif cfg.policy == "lcmp_w":   # beyond-paper: capacity-weighted stage 2
+        k_idx, _ = selmod.select_egress(fid, c_path, c_cong, valid, cfg.select,
+                                        weights=capg)
+    elif cfg.policy == "ecmp":
+        k_idx = bl.ecmp(fid, delay, capg, valid)
+    elif cfg.policy == "ucmp":
+        k_idx = bl.ucmp(fid, delay, capg, valid)
+    elif cfg.policy == "wcmp":
+        k_idx = bl.wcmp(fid, delay, capg, valid)
+    elif cfg.policy == "redte":
+        w = st.redte_w[pair]
+        k_idx = bl._weighted_hash(fid, w, valid)
+    else:
+        raise ValueError(cfg.policy)
+
+    chosen = jnp.take_along_axis(cand, jnp.maximum(k_idx, 0)[:, None],
+                                 axis=1)[:, 0]
+    chosen = jnp.where((k_idx >= 0) & is_flow, chosen, -1)      # (A,)
+
+    ok = chosen >= 0
+    cpath_sel = jnp.maximum(chosen, 0)
+    # queue wait seen by the first packets (standing queues on the path)
+    hop_sel = ar.path_links[cpath_sel]                          # (A,H)
+    hop_ok = hop_sel >= 0
+    qw = jnp.where(hop_ok, st.q_bytes[jnp.maximum(hop_sel, 0)]
+                   / ar.link_cap[jnp.maximum(hop_sel, 0)], 0.0).sum(-1)
+
+    rtt = jnp.maximum(2 * ar.path_prop[cpath_sel] // cfg.dt_us, 1)
+
+    def upd(a, vals, where_ok):
+        return a.at[fidx].set(jnp.where(where_ok, vals, a[fidx]))
+
+    st = dataclasses.replace(
+        st,
+        flow_path=upd(st.flow_path, chosen, ok),
+        remaining=upd(st.remaining, ar.f_size[fidx], ok),
+        rate=upd(st.rate, ar.path_cap[cpath_sel], ok),
+        cc_target=upd(st.cc_target, ar.path_cap[cpath_sel], ok),
+        active=upd(st.active, ok, ok),
+        extra_wait=upd(st.extra_wait, qw, ok),
+        rtt_steps=upd(st.rtt_steps, rtt.astype(jnp.int32), ok),
+    )
+    return st
+
+
+def _cc_update(t, st: SimState, ar: SimArrays, cfg: SimConfig,
+               path_of_flow, links_f, links_ok):
+    """Rate laws reacting to RTT-delayed per-path congestion signals.
+
+    Realism notes (these interact with the routing signal, see DESIGN):
+    - ECN marking is RED-style probabilistic between Kmin and Kmax, so the
+      equilibrium queue *grows with the number of backlogged flows* — a
+      CC that pinned queues at Kmin regardless of load would blind the
+      switch's Q estimator (and real DCQCN does not).
+    - DCQCN-style decrease/recovery: MD cuts both rate and target; the
+      increase phase fast-recovers halfway to target per RTT and only
+      probes (+AI on target) once recovered. Without a target bound, N
+      backlogged flows each AI-ing a line-rate fraction diverge.
+    """
+    slot = jnp.asarray((t - st.rtt_steps) % HIST, jnp.int32)
+    have_fb = t > st.rtt_steps
+    lidx = jnp.maximum(links_f, 0)                              # (F,H)
+    flat = lidx * HIST + slot[:, None]
+    q_sig = jnp.where(links_ok, st.hist_q.reshape(-1)[flat], 0.0).max(-1)
+    u_sig = jnp.where(links_ok, st.hist_u.reshape(-1)[flat], 0.0).max(-1)
+    q_sig = jnp.where(have_fb, q_sig, 0.0)
+    u_sig = jnp.where(have_fb, u_sig, 0.0)
+
+    line = ar.path_cap[jnp.maximum(path_of_flow, 0)]
+    # the CC control loop operates per RTT; discretize increments per step
+    inv_rtt = 1.0 / st.rtt_steps.astype(jnp.float32)
+    ai = cfg.ai_frac * line * inv_rtt          # ai_frac = per-RTT probe frac
+    can_dec = (t - st.last_dec) >= st.rtt_steps
+
+    # RED-style marking probability from the delayed queue signal
+    kmin = cfg.ecn_kmin_bytes * cfg.cap_scale
+    kmax = 10.0 * kmin
+    p_mark = jnp.clip((q_sig - kmin) / (kmax - kmin), 0.0, 1.0)
+    u01 = (selmod.fmix32(ar.f_id ^ jnp.uint32(t)).astype(jnp.float32)
+           * (1.0 / 4294967296.0))
+    marked = u01 < p_mark
+
+    target = jnp.maximum(st.cc_target, 0.05 * line)
+
+    def aimd(dec_event, md_rate):
+        """Shared DCQCN-shaped decrease/fast-recovery/probe machinery.
+        Recovery moves halfway to target per *RTT* (not per step) and the
+        target probes +ai_frac of line per RTT once recovered."""
+        dec = dec_event & can_dec
+        new_target = jnp.where(dec, st.rate, target)
+        recover = st.rate + (new_target - st.rate) * 0.5 * inv_rtt
+        probe = jnp.where(st.rate >= 0.95 * new_target, ai, 0.0)
+        rate = jnp.where(dec, st.rate * md_rate, recover + probe)
+        new_target = jnp.where(dec, new_target, new_target + probe)
+        return rate, new_target, dec
+
+    if cfg.cc == "dcqcn":
+        rate, new_target, dec = aimd(marked, cfg.md_factor)
+        alpha, pdel = st.cc_alpha, st.prev_delay
+    elif cfg.cc == "dctcp":
+        alpha = st.cc_alpha * (1 - 1 / 16) + marked.astype(jnp.float32) / 16
+        rate, new_target, dec = aimd(marked, 1.0 - alpha / 2)
+        pdel = st.prev_delay
+    elif cfg.cc == "timely":
+        lcap = ar.link_cap[lidx]
+        d_us = jnp.where(links_ok, st.hist_q.reshape(-1)[flat] / lcap, 0.0).max(-1)
+        d_us = jnp.where(have_fb, d_us, 0.0)
+        grad = d_us - st.prev_delay
+        t_high = 2.0 * kmin / line
+        rate, new_target, dec = aimd(((d_us > t_high) | (grad > 0)) & (d_us > 0),
+                                     cfg.md_factor)
+        alpha, pdel = st.cc_alpha, d_us
+    elif cfg.cc == "hpcc":
+        eta = 0.95
+        bdp = line * jnp.maximum(st.rtt_steps.astype(jnp.float32) * cfg.dt_us, 1.0)
+        u_tot = u_sig + q_sig / jnp.maximum(bdp, 1.0)   # inflight-based U
+        corr = jnp.clip(eta / jnp.maximum(u_tot, 1e-3), 0.3, 1.0)
+        rate, new_target, dec = aimd(u_tot > eta, 1.0)  # md via corr below
+        rate = jnp.where(dec, st.rate * corr, rate)
+        alpha, pdel = st.cc_alpha, st.prev_delay
+    else:
+        raise ValueError(cfg.cc)
+
+    rate = jnp.clip(rate, 0.001 * line, line)
+    new_target = jnp.clip(new_target, 0.001 * line, line)
+    last_dec = jnp.where(dec, jnp.int32(t), st.last_dec)
+    act = st.active
+    return dataclasses.replace(
+        st, rate=jnp.where(act, rate, st.rate),
+        cc_target=jnp.where(act, new_target, st.cc_target),
+        cc_alpha=alpha, prev_delay=pdel,
+        last_dec=jnp.where(act, last_dec, st.last_dec))
+
+
+def make_step(ar: SimArrays, cfg: SimConfig):
+    L = ar.link_cap.shape[0]
+    dt = float(cfg.dt_us)
+
+    def step(st: SimState, t):
+        # 0) failure injection + lazy fast-failover (paper §3.4): at the
+        # trip step, flows pinned to the dead path are treated as "first
+        # packets" again and re-hashed onto live candidates.
+        if cfg.fail_link >= 0:
+            trip_step = cfg.fail_at_us // cfg.dt_us
+            is_trip = t == trip_step
+            st = dataclasses.replace(
+                st, link_alive=st.link_alive.at[cfg.fail_link].set(
+                    jnp.where(t >= trip_step, False,
+                              st.link_alive[cfg.fail_link])))
+            st = jax.lax.cond(is_trip,
+                              lambda s: _reroute_dead(t, s, ar, cfg),
+                              lambda s: s, st)
+
+        # 1) switch monitor tick (every dt — the paper's "modest cadence")
+        qcells = (st.q_bytes / CELL_BYTES).astype(jnp.int32)
+        cong = congmod.monitor_update(st.cong, qcells, t * cfg.dt_us,
+                                      ar.tables, cfg.congp)
+        c_cong = congmod.calc_cong_cost(cong, ar.tables, cfg.congp)
+        st = dataclasses.replace(st, cong=cong, c_cong=c_cong)
+
+        # 2) arrivals + routing decisions (the herd batch)
+        st = _route_arrivals(t, st, ar, cfg)
+
+        # 3) offered load per link
+        pf = st.flow_path
+        links_f = ar.path_links[jnp.maximum(pf, 0)]             # (F,H)
+        links_ok = (links_f >= 0) & st.active[:, None] & (pf >= 0)[:, None]
+        lidx = jnp.maximum(links_f, 0)
+        contrib = jnp.where(links_ok, st.rate[:, None], 0.0)
+        offered = jax.ops.segment_sum(contrib.reshape(-1), lidx.reshape(-1),
+                                      num_segments=L)           # (L,) B/us
+
+        # 4) per-link share factor and queue integration
+        cap = jnp.where(st.link_alive, ar.link_cap, 1e-9)
+        factor_l = jnp.minimum(1.0, cap / jnp.maximum(offered, 1e-9))
+        served = jnp.minimum(offered, cap)
+        q = jnp.clip(st.q_bytes + (offered - cap) * dt, 0.0,
+                     float(cfg.buffer_bytes * cfg.cap_scale))
+        util = offered / cap
+        hslot = jnp.asarray(t % HIST, jnp.int32)
+        st = dataclasses.replace(
+            st, q_bytes=q,
+            hist_q=st.hist_q.at[:, hslot].set(q),
+            hist_u=st.hist_u.at[:, hslot].set(util),
+            u_ewma=st.u_ewma * 0.99 + 0.01 * jnp.minimum(util, 1.0),
+            serv_bytes=st.serv_bytes + served * dt)
+
+        # 5) CC rate update from delayed signals
+        st = _cc_update(t, st, ar, cfg, pf, links_f, links_ok)
+
+        # 6) drain flows at bottleneck-shared rate
+        f_factor = jnp.where(links_ok, factor_l[lidx], 1.0).min(-1)
+        send = jnp.where(st.active, st.rate * f_factor, 0.0)
+        remaining = st.remaining - send * dt
+
+        newly_done = st.active & (remaining <= 0)
+        # completion: propagation + residual queue wait on the path
+        qw_now = jnp.where(links_ok, q[lidx] / ar.link_cap[lidx], 0.0).sum(-1)
+        prop = ar.path_prop[jnp.maximum(pf, 0)].astype(jnp.float32)
+        fct = ((t + 1) * dt - ar.f_arr_us + prop
+               + 0.5 * (st.extra_wait + qw_now))
+        st = dataclasses.replace(
+            st,
+            remaining=jnp.maximum(remaining, 0.0),
+            active=st.active & ~newly_done,
+            done=st.done | newly_done,
+            fct_us=jnp.where(newly_done, fct, st.fct_us))
+
+        # 7) RedTE periodic split-ratio re-optimization (100 ms loop)
+        if cfg.policy == "redte":
+            period = max(cfg.redte_period_us // cfg.dt_us, 1)
+            due = (t % period) == 0
+            util_q8 = jnp.clip(st.u_ewma * 256, 0, 255).astype(jnp.int32)
+            first = ar.path_first[jnp.maximum(ar.pair_cand, 0)]
+            head = jnp.maximum(256 - util_q8[first], 1)
+            w = jnp.where(ar.pair_cand >= 0, head, 0).astype(jnp.int32)
+            st = dataclasses.replace(
+                st, redte_w=jnp.where(due, w, st.redte_w))
+
+        return st, None
+
+    return step
+
+
+def _reroute_dead(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> SimState:
+    """Re-decide every active flow whose pinned path lost a link (the
+    data-plane lazy-failover semantics, vectorized over all flows once at
+    the trip step)."""
+    hop = ar.path_links[jnp.maximum(st.flow_path, 0)]
+    dead = jnp.where(hop >= 0, ~st.link_alive[jnp.maximum(hop, 0)], False).any(-1)
+    move = st.active & dead & (st.flow_path >= 0)
+
+    pair = ar.f_pair
+    cand = ar.pair_cand[pair]                                   # (F,K)
+    cpad = jnp.maximum(cand, 0)
+    h = ar.path_links[cpad]
+    h_alive = jnp.where(h >= 0, st.link_alive[jnp.maximum(h, 0)], True).all(-1)
+    valid = (cand >= 0) & h_alive
+    c_path = ar.c_path[cpad]
+    c_cong = st.c_cong[ar.path_first[cpad]]
+    if cfg.policy == "lcmp":
+        k_idx, _ = selmod.select_egress(ar.f_id, c_path, c_cong, valid,
+                                        cfg.select)
+    else:  # baselines re-hash uniformly on failure
+        k_idx = bl.ecmp(ar.f_id, ar.path_prop[cpad],
+                        ar.path_cap_gbps[cpad], valid)
+    new_path = jnp.take_along_axis(cand, jnp.maximum(k_idx, 0)[:, None],
+                                   axis=1)[:, 0]
+    ok = move & (k_idx >= 0)
+    return dataclasses.replace(
+        st,
+        flow_path=jnp.where(ok, new_path, st.flow_path),
+        rate=jnp.where(ok, ar.path_cap[jnp.maximum(new_path, 0)], st.rate),
+        rtt_steps=jnp.where(
+            ok, jnp.maximum(2 * ar.path_prop[jnp.maximum(new_path, 0)]
+                            // cfg.dt_us, 1).astype(jnp.int32), st.rtt_steps),
+        active=jnp.where(move & (k_idx < 0), False, st.active))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def run(arrs: SimArrays, state: SimState, cfg: SimConfig) -> SimState:
+    """Execute the full horizon; returns final state (fct_us, done, ...)."""
+    step = make_step(arrs, cfg)
+    final, _ = jax.lax.scan(step, state, jnp.arange(cfg.num_steps))
+    return final

@@ -1,0 +1,68 @@
+"""FCT-slowdown and utilization metrics (paper §6 "Metrics").
+
+Slowdown = actual FCT / ideal FCT, where the ideal FCT is the flow run
+alone on the pair's minimum-propagation-delay candidate path: ideal =
+prop(best) + size / bottleneck_cap(best)  (queueing isolated by
+construction, exactly the paper's definition).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.netsim.fluid import SimArrays, SimConfig, SimState
+from repro.netsim.paths import PathTable
+from repro.traffic.gen import FlowSet
+
+
+@dataclasses.dataclass
+class FCTStats:
+    slowdown: np.ndarray     # (F_done,)
+    sizes: np.ndarray        # (F_done,)
+    completed: int
+    offered: int
+
+    def pct(self, q: float) -> float:
+        return float(np.percentile(self.slowdown, q)) if len(self.slowdown) else float("nan")
+
+    @property
+    def p50(self) -> float:
+        return self.pct(50)
+
+    @property
+    def p99(self) -> float:
+        return self.pct(99)
+
+    def by_size_bucket(self, edges) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for lo, hi in zip(edges[:-1], edges[1:]):
+            m = (self.sizes >= lo) & (self.sizes < hi)
+            if m.sum() >= 5:
+                s = self.slowdown[m]
+                out[f"{int(lo)}-{int(hi)}"] = {
+                    "p50": float(np.percentile(s, 50)),
+                    "p99": float(np.percentile(s, 99)),
+                    "n": int(m.sum()),
+                }
+        return out
+
+
+def fct_stats(final: SimState, table: PathTable, flows: FlowSet,
+              cfg: SimConfig) -> FCTStats:
+    done = np.asarray(final.done)
+    fct = np.asarray(final.fct_us)
+    sizes = flows.size_bytes
+    prop = table.pair_ideal_prop[flows.pair_id].astype(np.float64)
+    cap = table.pair_ideal_cap[flows.pair_id] * 125.0 * cfg.cap_scale
+    ideal = prop + sizes / cap
+    sl = fct[done] / ideal[done]
+    return FCTStats(slowdown=np.maximum(sl, 1.0), sizes=sizes[done],
+                    completed=int(done.sum()), offered=len(done))
+
+
+def link_utilization(final: SimState, arrs: SimArrays, cfg: SimConfig) -> np.ndarray:
+    """Average served utilization per link over the horizon (Fig. 1b)."""
+    cap_total = np.asarray(arrs.link_cap) * cfg.horizon_us
+    return np.asarray(final.serv_bytes) / np.maximum(cap_total, 1e-9)

@@ -1,0 +1,154 @@
+"""Candidate-path enumeration (control-plane side).
+
+The paper's switches choose among *m candidate next-hops* toward each
+destination (m in [2,8]). We enumerate, per (src,dst) pair, the best
+simple path through each distinct first hop (bounded depth), which yields
+exactly the per-next-hop candidate structure a DCI switch sees, and
+precompute per-path attributes: hop link indices, propagation delay
+(sum), bottleneck capacity (min).
+
+Pure numpy — runs once at setup; the simulator consumes the packed arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.netsim.topo import Topology
+
+MAX_HOPS = 5
+MAX_CAND = 8    # paper: m in [2, 8]
+
+
+@dataclasses.dataclass(frozen=True)
+class PathTable:
+    """Packed path/pair tables (all numpy, int32)."""
+    # per path
+    path_links: np.ndarray    # (NP, MAX_HOPS) link idx, -1 pad
+    path_len: np.ndarray      # (NP,)
+    path_prop_us: np.ndarray  # (NP,) sum of hop delays
+    path_cap: np.ndarray      # (NP,) bottleneck Gbps
+    path_first: np.ndarray    # (NP,) first-hop link idx
+    # per (src,dst) pair with traffic
+    pair_src: np.ndarray      # (NPAIR,)
+    pair_dst: np.ndarray      # (NPAIR,)
+    pair_cand: np.ndarray     # (NPAIR, MAX_CAND) path idx, -1 pad
+    pair_ncand: np.ndarray    # (NPAIR,)
+    pair_ideal_prop: np.ndarray  # (NPAIR,) us — min-prop candidate
+    pair_ideal_cap: np.ndarray   # (NPAIR,) Gbps — bottleneck cap of that path
+
+    @property
+    def num_paths(self) -> int:
+        return len(self.path_len)
+
+    def pair_index(self) -> Dict[Tuple[int, int], int]:
+        return {(int(s), int(d)): i
+                for i, (s, d) in enumerate(zip(self.pair_src, self.pair_dst))}
+
+
+def _enumerate_simple_paths(adj, src, dst, max_hops):
+    """DFS all simple paths src->dst up to max_hops links."""
+    out: List[List[int]] = []
+    stack = [(src, [], {src})]
+    while stack:
+        node, links_so_far, visited = stack.pop()
+        if len(links_so_far) >= max_hops:
+            continue
+        for (nbr, li) in adj[node]:
+            if nbr == dst:
+                out.append(links_so_far + [li])
+            elif nbr not in visited:
+                stack.append((nbr, links_so_far + [li], visited | {nbr}))
+    return out
+
+
+def build_path_table(topo: Topology, pairs: List[Tuple[int, int]],
+                     max_hops: int = MAX_HOPS, max_cand: int = MAX_CAND,
+                     detour_delay: float = 1.5, detour_hops: int = 1) -> PathTable:
+    """``detour_*`` implement the control-plane installation policy: a
+    candidate is only installed if its propagation delay is within
+    ``detour_delay`` x the pair's best and its hop count within
+    ``detour_hops`` of the shortest — nobody routes a 200 km pair the long
+    way around Europe. (Without this every ring pair is 'multi-path' and
+    the paper's 25.6% multi-path statistic on the 13-DC topology is
+    unreproducible.)"""
+    src_a, dst_a, cap_a, del_a = topo.arrays()
+    adj: Dict[int, List[Tuple[int, int]]] = {n: [] for n in range(topo.num_nodes)}
+    for li, (s, d) in enumerate(zip(src_a, dst_a)):
+        adj[int(s)].append((int(d), li))
+
+    all_paths: List[List[int]] = []
+    pair_rows = []
+    for (s, d) in pairs:
+        cands = _enumerate_simple_paths(adj, s, d, max_hops)
+        # group by first hop, keep the min-delay path per first hop
+        best: Dict[int, List[int]] = {}
+        for p in cands:
+            key = p[0]
+            if key not in best or _prop(p, del_a) < _prop(best[key], del_a):
+                best[key] = p
+        chosen = sorted(best.values(), key=lambda p: _prop(p, del_a))[:max_cand]
+        if chosen:  # prune absurd detours (control-plane install policy):
+            # equal-hop alternatives are always installed (that's the
+            # testbed's six parallel routes); longer paths only if their
+            # delay stays within detour_delay x the best.
+            best_prop = _prop(chosen[0], del_a)
+            best_len = min(len(p) for p in chosen)
+            chosen = [p for p in chosen
+                      if len(p) == best_len
+                      or (len(p) <= best_len + detour_hops
+                          and _prop(p, del_a) <= detour_delay * max(best_prop, 1))]
+        idxs = []
+        for p in chosen:
+            idxs.append(len(all_paths))
+            all_paths.append(p)
+        pair_rows.append((s, d, idxs))
+
+    NP = len(all_paths)
+    path_links = np.full((NP, max_hops), -1, np.int32)
+    path_len = np.zeros(NP, np.int32)
+    for i, p in enumerate(all_paths):
+        path_links[i, :len(p)] = p
+        path_len[i] = len(p)
+    path_prop = np.array([_prop(p, del_a) for p in all_paths], np.int32) \
+        if NP else np.zeros(0, np.int32)
+    path_cap = np.array([int(cap_a[p].min()) for p in all_paths], np.int32) \
+        if NP else np.zeros(0, np.int32)
+    path_first = np.array([p[0] for p in all_paths], np.int32) \
+        if NP else np.zeros(0, np.int32)
+
+    NPAIR = len(pair_rows)
+    pair_cand = np.full((NPAIR, max_cand), -1, np.int32)
+    pair_ncand = np.zeros(NPAIR, np.int32)
+    pair_src = np.zeros(NPAIR, np.int32)
+    pair_dst = np.zeros(NPAIR, np.int32)
+    ideal_prop = np.zeros(NPAIR, np.int32)
+    ideal_cap = np.zeros(NPAIR, np.int32)
+    for i, (s, d, idxs) in enumerate(pair_rows):
+        pair_src[i], pair_dst[i] = s, d
+        pair_cand[i, :len(idxs)] = idxs
+        pair_ncand[i] = len(idxs)
+        if idxs:
+            props = path_prop[idxs]
+            j = idxs[int(np.argmin(props))]
+            ideal_prop[i] = path_prop[j]
+            ideal_cap[i] = path_cap[j]
+    return PathTable(path_links, path_len, path_prop, path_cap, path_first,
+                     pair_src, pair_dst, pair_cand, pair_ncand,
+                     ideal_prop, ideal_cap)
+
+
+def _prop(path_links: List[int], delays) -> int:
+    return int(sum(int(delays[li]) for li in path_links))
+
+
+def all_pairs(topo: Topology) -> List[Tuple[int, int]]:
+    return [(s, d) for s in range(topo.num_nodes)
+            for d in range(topo.num_nodes) if s != d]
+
+
+def multipath_pair_fraction(table: PathTable) -> float:
+    """Fraction of pairs with >1 candidate (paper §6.2: 25.6% on 13-DC)."""
+    return float((table.pair_ncand > 1).mean())

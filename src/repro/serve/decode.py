@@ -1,0 +1,293 @@
+"""Single-token decode with per-family caches (serve_step).
+
+Cache layout (leaves stacked over layers, scanned like the params):
+- attention : k/v (L, B, Smax, Kv, hd)
+- mamba1    : conv (L, B, 3, Di), ssm (L, B, Di, N)
+- mamba2    : conv (L, B, 3, Di+2N), ssm (L, B, H, N, P)
+- zamba shared attention: one k/v cache per application site
+- encdec    : decoder self-attn caches + precomputed cross k/v
+
+``decode_32k`` / ``long_500k`` shapes lower exactly this step: one new
+token against a seq_len-sized cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.arch import ArchConfig
+from repro.models import arch as _archmod
+
+
+# ----------------------------------------------------------------- caches
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.adt
+    Lx, B, Kv, hd = cfg.n_layers, batch, cfg.n_kv, cfg.hd
+    Di = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+
+    def kv(n, s):
+        return dict(k=jnp.zeros((n, B, s, Kv, hd), dtype),
+                    v=jnp.zeros((n, B, s, Kv, hd), dtype))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return dict(attn=kv(Lx, max_seq))
+    if cfg.family == "ssm":
+        return dict(conv=jnp.zeros((Lx, B, 3, Di), dtype),
+                    ssm=jnp.zeros((Lx, B, Di, N), jnp.float32))
+    if cfg.family == "hybrid":
+        H = Di // 64
+        sites = (cfg.n_layers + cfg.shared_attn_every - 1) \
+            // cfg.shared_attn_every if cfg.shared_attn_every else 0
+        return dict(conv=jnp.zeros((Lx, B, 3, Di + 2 * N), dtype),
+                    ssm=jnp.zeros((Lx, B, H, N, 64), jnp.float32),
+                    shared=kv(max(sites, 1), max_seq))
+    if cfg.family == "encdec":
+        return dict(attn=kv(Lx, max_seq), cross=kv(Lx, cfg.enc_seq))
+    raise ValueError(cfg.family)
+
+
+def prefill_cross_cache(params, cfg: ArchConfig, enc_out):
+    """Precompute encoder-side K/V for whisper cross-attention."""
+    def one(lp):
+        k = jnp.einsum("bsd,de->bse", enc_out, lp["xattn"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsd,de->bse", enc_out, lp["xattn"]["wv"].astype(enc_out.dtype))
+        B, S, _ = enc_out.shape
+        return dict(k=k.reshape(B, S, cfg.n_kv, cfg.hd),
+                    v=v.reshape(B, S, cfg.n_kv, cfg.hd))
+    return jax.vmap(one, in_axes=0)(params["layers"])
+
+
+# ------------------------------------------------------------ attn decode
+def _attn_decode(p, cfg: ArchConfig, x, kc, vc, pos, *, local=False,
+                 cross=False, use_rope=True):
+    """x: (B,1,D); kc/vc: (B,Smax,Kv,hd). Returns (y, kc, vc)."""
+    B = x.shape[0]
+    h = L.rms_norm(x, p["ln"])
+    q = jnp.einsum("bsd,de->bse", h, p["wq"].astype(h.dtype))
+    q = q.reshape(B, 1, cfg.n_heads, cfg.hd)
+    if not cross:
+        k = jnp.einsum("bsd,de->bse", h, p["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,de->bse", h, p["wv"].astype(h.dtype))
+        k = k.reshape(B, 1, cfg.n_kv, cfg.hd)
+        v = v.reshape(B, 1, cfg.n_kv, cfg.hd)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, p["q_norm"])
+            k = L.rms_norm(k, p["k_norm"])
+        if use_rope:
+            pp = jnp.full((B, 1), pos)
+            q = L.rope(q, pp, cfg.rope_theta)
+            k = L.rope(k, pp, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+    elif cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+
+    Smax = kc.shape[1]
+    g = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(B, 1, cfg.n_kv, g, cfg.hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc).astype(jnp.float32)
+    logits = logits / jnp.sqrt(cfg.hd).astype(jnp.float32)
+    if cfg.attn_softcap:
+        logits = jnp.tanh(logits / cfg.attn_softcap) * cfg.attn_softcap
+    kpos = jnp.arange(Smax)
+    mask = jnp.ones((Smax,), bool) if cross else (kpos <= pos)
+    if local and cfg.window and not cross:
+        mask &= kpos > pos - cfg.window
+    logits = jnp.where(mask[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, -1).astype(x.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vc)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+    y = x + jnp.einsum("bse,ed->bsd", o, p["wo"].astype(h.dtype))
+    return y, kc, vc
+
+
+# ----------------------------------------------------------- mamba decode
+def _mamba1_decode(p, cfg, x, conv, ssm):
+    B = x.shape[0]
+    h = L.rms_norm(x, p["ln"])[:, 0]
+    Di = p["A_log"].shape[0]
+    xz = jnp.einsum("bd,de->be", h, p["in_proj"].astype(h.dtype))
+    xi, z = jnp.split(xz, 2, -1)
+    k = p["conv_w"].astype(h.dtype)
+    hist = jnp.concatenate([conv, xi[:, None, :]], 1)           # (B,4,Di)
+    xi = jax.nn.silu(jnp.einsum("bki,ki->bi", hist, k))
+    conv = hist[:, 1:]
+    dt_rank = p["dt_proj"].shape[0]
+    N = p["A_log"].shape[1]
+    proj = jnp.einsum("bi,ie->be", xi, p["x_proj"].astype(h.dtype))
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], -1)
+    dt = jax.nn.softplus(jnp.einsum("br,ri->bi", dt, p["dt_proj"].astype(h.dtype)))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+    dBx = (dt * xi).astype(jnp.float32)[..., None] * Bc.astype(jnp.float32)[:, None, :]
+    ssm = ssm * dA + dBx
+    y = jnp.einsum("bin,bn->bi", ssm, Cc.astype(jnp.float32)).astype(h.dtype)
+    y = y + xi * p["D_skip"].astype(h.dtype)
+    y = y * jax.nn.silu(z)
+    return x + jnp.einsum("bi,id->bd", y, p["out_proj"].astype(h.dtype))[:, None], conv, ssm
+
+
+def _mamba2_decode(p, cfg, x, conv, ssm):
+    B = x.shape[0]
+    h = L.rms_norm(x, p["ln"])[:, 0]
+    Di = p["norm_scale"].shape[0]
+    H = p["A_log"].shape[0]
+    P = Di // H
+    N = (p["in_proj"].shape[1] - 2 * Di - H) // 2
+    zxbcdt = jnp.einsum("bd,de->be", h, p["in_proj"].astype(h.dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [Di, 2 * Di + 2 * N], -1)
+    k = p["conv_w"].astype(h.dtype)
+    hist = jnp.concatenate([conv, xbc[:, None, :]], 1)
+    xbc = jax.nn.silu(jnp.einsum("bki,ki->bi", hist, k))
+    conv = hist[:, 1:]
+    xi, Bc, Cc = jnp.split(xbc, [Di, Di + N], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))                # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                        # (B,H)
+    xh = xi.reshape(B, H, P).astype(jnp.float32)
+    dBx = dt[..., None, None] * Bc.astype(jnp.float32)[:, None, :, None] \
+        * xh[:, :, None, :]                                     # (B,H,N,P)
+    ssm = ssm * dA[..., None, None] + dBx
+    y = jnp.einsum("bhnp,bn->bhp", ssm, Cc.astype(jnp.float32))
+    y = y + xh * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, Di).astype(h.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return x + jnp.einsum("bi,id->bd", y, p["out_proj"].astype(h.dtype))[:, None], conv, ssm
+
+
+# -------------------------------------------------------------- serve step
+def decode_step(params, cfg: ArchConfig, cache, tokens, pos):
+    """tokens (B,1) int32, pos: scalar int32 -> (logits (B,1,V), cache')."""
+    x = params["embed"][tokens].astype(cfg.adt)
+    if cfg.family == "dense" and cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.adt)
+
+    fam = cfg.family
+    every = cfg.shared_attn_every
+    shared = params.get("shared_attn")
+
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models.arch import _mlp_apply, _moe_apply
+
+        def layer(carry, xs):
+            h = carry
+            lp, kc, vc, idx = xs
+            if cfg.alt_local_global:
+                h, kc, vc = _attn_decode(lp["attn"], cfg, h, kc, vc, pos,
+                                         local=False)  # pairs handled below
+            else:
+                h, kc, vc = _attn_decode(lp["attn"], cfg, h, kc, vc, pos,
+                                         local=bool(cfg.window))
+            if fam == "moe":
+                h = _moe_apply(lp["moe"], h, cfg)
+            else:
+                h = _mlp_apply(lp["mlp"], h)
+            return h, dict(k=kc, v=vc)
+
+        if cfg.alt_local_global:
+            # static local/global alternation: scan layer *pairs*
+            def pair(carry, xs):
+                h = carry
+                lp, kc, vc, idx = xs
+                lp0 = jax.tree.map(lambda a: a[0], lp)
+                lp1 = jax.tree.map(lambda a: a[1], lp)
+                h, k0, v0 = _attn_decode(lp0["attn"], cfg, h, kc["0"], vc["0"],
+                                         pos, local=True)
+                h = _mlp_or_moe(lp0, h, cfg)
+                h, k1, v1 = _attn_decode(lp1["attn"], cfg, h, kc["1"], vc["1"],
+                                         pos, local=False)
+                h = _mlp_or_moe(lp1, h, cfg)
+                return h, dict(k={"0": k0, "1": k1}, v={"0": v0, "1": v1})
+
+            def _mlp_or_moe(lp, h, cfg):
+                return _moe_apply(lp["moe"], h, cfg) if fam == "moe" \
+                    else _mlp_apply(lp["mlp"], h)
+
+            np2 = cfg.n_layers // 2
+            lp_pairs = jax.tree.map(
+                lambda a: a.reshape(np2, 2, *a.shape[1:]), params["layers"])
+            kcp = {"0": cache["attn"]["k"][0::2], "1": cache["attn"]["k"][1::2]}
+            vcp = {"0": cache["attn"]["v"][0::2], "1": cache["attn"]["v"][1::2]}
+            x, kv_new = _archmod._scan(
+                pair, x, (lp_pairs, kcp, vcp, jnp.arange(np2)))
+            k_all = jnp.stack([kv_new["k"]["0"], kv_new["k"]["1"]], 1) \
+                .reshape(cfg.n_layers, *cache["attn"]["k"].shape[1:])
+            v_all = jnp.stack([kv_new["v"]["0"], kv_new["v"]["1"]], 1) \
+                .reshape(cfg.n_layers, *cache["attn"]["v"].shape[1:])
+            cache = dict(attn=dict(k=k_all, v=v_all))
+        else:
+            x, kv_new = _archmod._scan(
+                layer, x,
+                (params["layers"], cache["attn"]["k"], cache["attn"]["v"],
+                 jnp.arange(cfg.n_layers)))
+            cache = dict(attn=kv_new)
+
+    elif fam == "ssm":
+        def layer(h, xs):
+            lp, conv, ssm = xs
+            h, conv, ssm = _mamba1_decode(lp["mamba"], cfg, h, conv, ssm)
+            return h, (conv, ssm)
+        x, (conv, ssm) = _archmod._scan(
+            layer, x, (params["layers"], cache["conv"], cache["ssm"]))
+        cache = dict(conv=conv, ssm=ssm)
+
+    elif fam == "hybrid":
+        sites = cache["shared"]["k"].shape[0]
+        site_of_layer = jnp.arange(cfg.n_layers) // max(every, 1)
+
+        def layer(carry, xs):
+            h, sk, sv = carry
+            lp, conv, ssm, idx = xs
+
+            def with_attn(args):
+                h, sk, sv = args
+                site = site_of_layer[idx]
+                kc = jax.lax.dynamic_index_in_dim(sk, site, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(sv, site, 0, keepdims=False)
+                h2, kc, vc = _attn_decode(shared, cfg, h, kc, vc, pos)
+                sk2 = jax.lax.dynamic_update_index_in_dim(sk, kc, site, 0)
+                sv2 = jax.lax.dynamic_update_index_in_dim(sv, vc, site, 0)
+                return h2, sk2, sv2
+
+            use = (every > 0) & (jnp.mod(idx, max(every, 1)) == 0)
+            h, sk, sv = jax.lax.cond(use, with_attn, lambda a: a, (h, sk, sv))
+            h, conv, ssm = _mamba2_decode(lp["mamba"], cfg, h, conv, ssm)
+            return (h, sk, sv), (conv, ssm)
+
+        (x, sk, sv), (conv, ssm) = _archmod._scan(
+            layer, (x, cache["shared"]["k"], cache["shared"]["v"]),
+            (params["layers"], cache["conv"], cache["ssm"],
+             jnp.arange(cfg.n_layers)))
+        cache = dict(conv=conv, ssm=ssm, shared=dict(k=sk, v=sv))
+
+    elif fam == "encdec":
+        from repro.models.arch import _mlp_apply
+
+        def layer(h, xs):
+            lp, kc, vc, xk, xv = xs
+            h, kc, vc = _attn_decode(lp["attn"], cfg, h, kc, vc, pos,
+                                     use_rope=False)
+            h, _, _ = _attn_decode(lp["xattn"], cfg, h, xk, xv, pos,
+                                   cross=True, use_rope=False)
+            h = _mlp_apply(lp["mlp"], h)
+            return h, dict(k=kc, v=vc)
+
+        x, kv_new = _archmod._scan(
+            layer, x, (params["layers"], cache["attn"]["k"],
+                       cache["attn"]["v"], cache["cross"]["k"],
+                       cache["cross"]["v"]))
+        cache = dict(attn=kv_new, cross=cache["cross"])
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(x, params["final_ln"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits, cache

@@ -1,0 +1,79 @@
+"""Synthetic inter-DC traffic generation (paper §6 workloads).
+
+Given a topology's path table, a size CDF, and a target average
+utilization rho, generate Poisson flow arrivals "randomly pairing senders
+and receivers" across the requested pairs (all-to-all, or a single DC
+pair for the testbed experiments).
+
+Load calibration follows the standard FCT-benchmark convention: the
+aggregate arrival byte-rate equals ``rho x (sum of ideal-path bottleneck
+capacities over distinct pairs, de-duplicated per first-hop link)`` —
+i.e. rho is the average utilization the *ideal* placement would produce
+on the long-haul links. This matches how traffic_gen.py in the paper's
+artifact drives NS-3 (per-link utilization targets).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.netsim.paths import PathTable
+from repro.traffic.cdf import SizeCDF
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowSet:
+    """Flat arrays describing all flows of one experiment (numpy)."""
+    arrival_us: np.ndarray   # (F,) int64, sorted
+    size_bytes: np.ndarray   # (F,) float64
+    pair_id: np.ndarray      # (F,) int32 index into PathTable pair_*
+    flow_id: np.ndarray      # (F,) uint32 (hash key)
+
+    @property
+    def num_flows(self) -> int:
+        return len(self.arrival_us)
+
+
+def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
+             pair_ids=None, seed: int = 0, max_flows: int = 200_000,
+             cap_scale: float = 1.0) -> FlowSet:
+    """Poisson arrivals at average utilization ``load`` over ``duration_us``.
+
+    ``cap_scale`` must match the simulator's capacity scale so the offered
+    byte rate targets the *simulated* capacities."""
+    rng = np.random.default_rng(seed)
+    if pair_ids is None:
+        pair_ids = np.arange(len(table.pair_src))
+    pair_ids = np.asarray(pair_ids, np.int32)
+
+    # Load calibration: the paper's "x% load" reproduces its own Fig. 1b
+    # utilization numbers only when normalized by the *bottleneck class*:
+    # under ECMP each of the N first-hop links carries total/N, and the
+    # smallest link is the binding constraint, so
+    #    total_rate = load x N_first_hop_links x min(first-hop cap).
+    # (Check: 30% on the 8-DC testbed -> 72 Gbps total -> 200G links at 6%,
+    # 40G links at 30% under ECMP — exactly the paper's quoted values.)
+    links_seen = {}
+    for pid in pair_ids:
+        for k in range(int(table.pair_ncand[pid])):
+            p = int(table.pair_cand[pid, k])
+            links_seen[int(table.path_first[p])] = int(table.path_cap[p])
+    agg_gbps = len(links_seen) * min(links_seen.values())
+    agg_Bpus = agg_gbps * 125.0 * cap_scale   # Gbps -> bytes/us (scaled)
+
+    mean_size = cdf.mean()
+    lam = load * agg_Bpus / mean_size          # flows per us, aggregate
+    n = min(int(lam * duration_us * 1.2) + 64, max_flows)
+
+    gaps = rng.exponential(1.0 / lam, n)
+    arrivals = np.cumsum(gaps) * 1e0
+    arrivals = arrivals[arrivals < duration_us * 1e0]
+    n = len(arrivals)
+
+    sizes = cdf.sample(rng, n)
+    pids = pair_ids[rng.integers(0, len(pair_ids), n)]
+    fids = rng.integers(1, 1 << 32, n, dtype=np.uint32)
+    return FlowSet(arrival_us=arrivals.astype(np.int64),
+                   size_bytes=sizes, pair_id=pids.astype(np.int32),
+                   flow_id=fids)

@@ -1,0 +1,104 @@
+"""train_step / serve_step builders — the functions the launcher jits with
+mesh shardings and the dry-run lowers.
+
+Compute flows: params f32 (sharded FSDPxTP), activations bf16, grads f32,
+AdamW f32. Cross-pod gradient reduction goes through the LCMP-scheduled
+collective layer (repro.dist.lcmp_collectives) when a 'pod' axis exists;
+optionally int8-compressed (repro.dist.compress).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.arch import ArchConfig, forward, init_params
+from repro.serve.decode import decode_step, init_cache
+from repro.train.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optim: AdamWConfig = AdamWConfig()
+    microbatches: int = 1            # gradient accumulation
+    pod_reduce: str = "psum"         # psum | lcmp | lcmp_int8
+    pod_axis: Optional[str] = None   # set to "pod" on multi-pod meshes
+
+
+def loss_fn(params, cfg: ArchConfig, tokens, labels, extra=None):
+    logits = forward(params, cfg, tokens, extra=extra)
+    V = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.where(mask, lse - gold, 0.0)
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig = TrainConfig()):
+    """Returns train_step(params, opt, batch) -> (params, opt, metrics)."""
+
+    def grads_of(params, tokens, labels, extra):
+        return jax.value_and_grad(loss_fn)(params, cfg, tokens, labels,
+                                           extra=extra)
+
+    def train_step(params, opt: AdamWState, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extra = batch.get("extra")
+        mb = tcfg.microbatches
+        if mb > 1:
+            B = tokens.shape[0]
+            tk = tokens.reshape(mb, B // mb, -1)
+            lb = labels.reshape(mb, B // mb, -1)
+            ex = (extra.reshape(mb, B // mb, *extra.shape[1:])
+                  if extra is not None else None)
+
+            def acc(carry, xs):
+                gsum, lsum = carry
+                t, l = xs[0], xs[1]
+                e = xs[2] if len(xs) > 2 else None
+                loss, g = grads_of(params, t, l, e)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+            xs = (tk, lb) if ex is None else (tk, lb, ex)
+            (gsum, lsum), _ = jax.lax.scan(acc, (zero, jnp.zeros(())), xs)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+        else:
+            loss, grads = grads_of(params, tokens, labels, extra)
+
+        # cross-pod gradient reduction (the paper's technique lives here)
+        if tcfg.pod_axis is not None:
+            from repro.dist import lcmp_collectives as lc
+            if tcfg.pod_reduce == "psum":
+                grads = jax.tree.map(
+                    lambda g: jax.lax.pmean(g, tcfg.pod_axis), grads)
+            elif tcfg.pod_reduce == "lcmp":
+                grads = lc.lcmp_pod_reduce(grads, tcfg.pod_axis,
+                                           compress=False)
+            elif tcfg.pod_reduce == "lcmp_int8":
+                grads = lc.lcmp_pod_reduce(grads, tcfg.pod_axis,
+                                           compress=True)
+
+        params2, opt2, gnorm = adamw_update(tcfg.optim, params, grads, opt)
+        return params2, opt2, dict(loss=loss, grad_norm=gnorm)
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """Returns serve_step(params, cache, tokens, pos) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos)
+
+    return serve_step
+
+
+def init_train_state(cfg: ArchConfig, key):
+    params = init_params(cfg, key)
+    return params, adamw_init(params)

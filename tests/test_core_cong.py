@@ -1,0 +1,104 @@
+"""Unit + property tests for the on-switch congestion estimator (§3.3).
+
+Queue depths are passed in 1 KiB cells (see tables.py unit note)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cong, tables
+
+TB = tables.bootstrap_tables([100, 100, 400], buffer_bytes=6 * 10**9)
+P = cong.CongParams()
+GB_CELLS = 10**9 // 1024  # cells in 1 GB
+
+
+def _state(n=3):
+    return cong.CongState.init(n)
+
+
+def _cells(*bytes_):
+    return jnp.asarray([b // 1024 for b in bytes_], jnp.int32)
+
+
+def test_empty_queues_zero_cost():
+    s = _state()
+    s = cong.monitor_update(s, jnp.zeros(3, jnp.int32), 0, TB, P)
+    assert np.asarray(cong.calc_cong_cost(s, TB, P)).tolist() == [0, 0, 0]
+
+
+def test_q_signal_monotone_in_queue_depth():
+    s = _state()
+    s = cong.monitor_update(s, _cells(0, 3 * 10**9, 6 * 10**9), 0, TB, P)
+    q, _, _ = cong.cong_signals(s, TB, P)
+    q = np.asarray(q)
+    assert q[0] <= q[1] <= q[2] and q[0] < q[2]
+
+
+def test_trend_positive_on_growth_zero_on_drain():
+    s = _state()
+    s = cong.monitor_update(s, _cells(0, 10**9, 10**9), 0, TB, P)
+    s = cong.monitor_update(s, _cells(0, 2 * 10**9, 0), 100, TB, P)
+    _, t, _ = cong.cong_signals(s, TB, P)
+    t = np.asarray(t)
+    assert t[0] == 0          # never had bytes
+    assert t[1] > 0           # growing queue
+    assert t[2] == 0          # draining queue -> non-positive trend clamps to 0
+
+
+def test_ewma_shift_matches_eq3():
+    s = _state(1)
+    k = P.ewma_k
+    t_acc = 0
+    qprev = 0
+    for step, qc in enumerate([1000, 5000, 3000, 3000, 20000]):
+        s = cong.monitor_update(s, jnp.array([qc], jnp.int32), step * 100, TB, P)
+        delta = qc - qprev
+        t_acc = t_acc - (t_acc >> k) + (delta >> k)
+        qprev = qc
+        assert int(s.trend[0]) == t_acc  # bit-exact Eq. (3)
+
+
+def test_duration_counter_arms_and_decays():
+    s = _state(1)
+    full = _cells(6 * 10**9)
+    for i in range(8):
+        s = cong.monitor_update(s, full, i * 100, TB, P)
+    assert int(s.dur_cnt[0]) == 8
+    for i in range(3):
+        s = cong.monitor_update(s, _cells(0), 800 + i * 100, TB, P)
+    assert int(s.dur_cnt[0]) == 1  # halved thrice
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.integers(0, 6 * GB_CELLS), min_size=1, max_size=12))
+def test_cong_cost_always_in_byte_range(qs):
+    s = _state(1)
+    for i, qc in enumerate(qs):
+        s = cong.monitor_update(s, jnp.array([qc], jnp.int32), i * 100, TB, P)
+        c = int(cong.calc_cong_cost(s, TB, P)[0])
+        assert 0 <= c <= 255
+
+
+def test_persistent_congestion_scores_higher_than_burst():
+    """A queue that *stays* high must out-score a one-sample burst of the
+    same depth (the D persistence term at work)."""
+    burst = _state(1)
+    burst = cong.monitor_update(burst, _cells(5 * 10**9), 0, TB, P)
+
+    persist = _state(1)
+    for i in range(40):
+        persist = cong.monitor_update(persist, _cells(5 * 10**9), i * 100, TB, P)
+    cb = int(cong.calc_cong_cost(burst, TB, P)[0])
+    cp = int(cong.calc_cong_cost(persist, TB, P)[0])
+    assert cp > cb
+
+
+def test_trend_normalization_rate_dependent():
+    """Same byte growth is a *stronger* signal on a slower link."""
+    tb = tables.bootstrap_tables([25, 400], buffer_bytes=6 * 10**9)
+    s = cong.CongState.init(2)
+    grow = _cells(2 * 10**8, 2 * 10**8)
+    s = cong.monitor_update(s, grow // 2, 0, tb, P)
+    s = cong.monitor_update(s, grow, 100, tb, P)
+    _, t, _ = cong.cong_signals(s, tb, P)
+    assert int(t[0]) >= int(t[1])

@@ -1,0 +1,77 @@
+"""Unit + property tests for the path-quality representation (paper §3.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pathq, tables
+
+
+def test_delay_score_saturates_at_255():
+    p = pathq.PathQParams()
+    assert int(pathq.calc_delay_cost(10**9, p)) == 255
+
+
+def test_delay_score_zero_for_zero_delay():
+    assert int(pathq.calc_delay_cost(0)) == 0
+
+
+def test_delay_score_shift_semantics():
+    p = pathq.PathQParams(d_shift=8)
+    # 5 ms one-way (1000 km) -> 5000 >> 8 = 19
+    assert int(pathq.calc_delay_cost(5000, p)) == 5000 >> 8
+    # 250 ms saturates: 250000 >> 8 = 976 -> 255
+    assert int(pathq.calc_delay_cost(250_000, p)) == 255
+
+
+def test_linkcap_monotone_decreasing_in_capacity():
+    th = tables.capacity_class_thresholds(400, 10)
+    caps = jnp.array([10, 40, 100, 200, 400])
+    scores = pathq.calc_linkcap_cost(caps, th)
+    s = np.asarray(scores)
+    assert (np.diff(s) <= 0).all(), s
+    assert s[0] > s[-1]
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 10**7), st.integers(1, 400))
+def test_cpath_bounds_and_dtype(delay_us, cap):
+    th = tables.capacity_class_thresholds(400, 10)
+    c = pathq.calc_path_quality(jnp.array([delay_us]), jnp.array([cap]), th)
+    assert c.dtype == jnp.int32
+    assert 0 <= int(c[0]) <= 255
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10**6), st.integers(0, 10**6), st.integers(1, 400))
+def test_cpath_monotone_in_delay(d1, d2, cap):
+    """More delay at equal capacity never yields a *smaller* C_path."""
+    th = tables.capacity_class_thresholds(400, 10)
+    lo, hi = min(d1, d2), max(d1, d2)
+    c = pathq.calc_path_quality(jnp.array([lo, hi]), jnp.array([cap, cap]), th)
+    assert int(c[0]) <= int(c[1])
+
+
+def test_path_bottleneck_stats_sum_and_min():
+    link_delay = jnp.array([10, 20, 30, 40], jnp.int32)
+    link_cap = jnp.array([100, 40, 400, 200], jnp.int32)
+    paths = jnp.array([[0, 1, -1], [2, 3, 1]], jnp.int32)
+    plen = jnp.array([2, 3], jnp.int32)
+    d, c = pathq.path_bottleneck_stats(link_delay, link_cap, paths, plen)
+    assert d.tolist() == [30, 90]
+    assert c.tolist() == [40, 40]
+
+
+def test_paper_fig1_ranking():
+    """Fig. 1 scenario: 6 paths = {high,med,low} capacity x {low,high} delay.
+
+    With the paper's delay-biased weights (3,1) a low-delay/medium-capacity
+    path must beat a high-delay/high-capacity one (the UCMP failure mode)."""
+    th = tables.capacity_class_thresholds(400, 10)
+    delays = jnp.array([5_000, 250_000, 5_000, 250_000, 5_000, 250_000])
+    caps = jnp.array([200, 200, 100, 100, 40, 40])
+    c = np.asarray(pathq.calc_path_quality(delays, caps, th))
+    # low-delay medium-capacity (idx 2) < high-delay high-capacity (idx 1)
+    assert c[2] < c[1]
+    # and among equal delay, fatter is no worse
+    assert c[0] <= c[2] <= c[4]

@@ -1,0 +1,116 @@
+"""End-to-end tests of the composed DCI switch state machine (Fig. 2):
+stickiness, GC, lazy fast-failover, and the full routing workflow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import switchd, tables
+from repro.core import flowcache as fc
+
+# 6 candidate paths (Fig. 1): {200,200,100,100,40,40} Gbps x {5,250} ms
+DELAYS = jnp.array([5_000, 250_000, 5_000, 250_000, 5_000, 250_000])
+CAPS = jnp.array([200, 200, 100, 100, 40, 40])
+PORTS = jnp.arange(6, dtype=jnp.int32)
+
+
+def _mk(cache_capacity=512):
+    tb = tables.bootstrap_tables([200, 200, 100, 100, 40, 40],
+                                 buffer_bytes=6 * 10**9)
+    return switchd.make_switch(tb, DELAYS, CAPS, PORTS, num_ports=6,
+                               cache_capacity=cache_capacity)
+
+
+def test_first_packet_decides_second_sticks():
+    sw = _mk()
+    fids = jnp.array([101, 202, 303], dtype=jnp.uint32)
+    sw, idx1, new1 = switchd.route_batch(sw, fids, now_us=0)
+    assert np.asarray(new1).all()
+    sw, idx2, new2 = switchd.route_batch(sw, fids, now_us=10)
+    assert not np.asarray(new2).any()
+    assert np.array_equal(np.asarray(idx1), np.asarray(idx2))  # stickiness
+
+
+def test_gc_evicts_idle_flows():
+    sw = _mk()
+    fids = jnp.array([7], dtype=jnp.uint32)
+    sw, idx1, _ = switchd.route_batch(sw, fids, now_us=0)
+    p = switchd.SwitchParams(idle_timeout_us=1000)
+    sw = switchd.gc_tick(sw, now_us=5000, params=p)
+    _, _, new = switchd.route_batch(sw, fids, now_us=5001)
+    assert np.asarray(new).all()  # entry was garbage-collected
+
+
+def test_lazy_failover_rehashes_to_live_port():
+    sw = _mk()
+    fids = (jnp.arange(200, dtype=jnp.uint32) * jnp.uint32(2654435761))
+    sw, idx1, _ = switchd.route_batch(sw, fids, now_us=0)
+    dead_port = int(np.bincount(np.asarray(idx1), minlength=6).argmax())
+    alive = jnp.ones(6, bool).at[dead_port].set(False)
+    sw = switchd.set_port_liveness(sw, alive)
+    sw, idx2, renew = switchd.route_batch(sw, fids, now_us=10)
+    idx2 = np.asarray(idx2)
+    assert (idx2 != dead_port).all()               # nobody lands on dead port
+    moved = np.asarray(idx1) == dead_port
+    assert np.asarray(renew)[moved].all()          # dead-port flows re-decide
+    # non-moved flows stay sticky unless their direct-mapped slot collided
+    same = ~np.asarray(renew)
+    assert (idx2[same] == np.asarray(idx1)[same]).all()
+    assert same[~moved].mean() > 0.7               # few collisions only
+
+
+def test_routing_prefers_low_delay_paths_when_uncongested():
+    sw = _mk()
+    fids = (jnp.arange(2000, dtype=jnp.uint32) * jnp.uint32(40503) + 17)
+    sw, idx, _ = switchd.route_batch(sw, fids, now_us=0)
+    counts = np.bincount(np.asarray(idx), minlength=6)
+    # C_path with (3,1): low-delay paths (0,2,4) dominate the kept set
+    assert counts[[1, 3, 5]].sum() == 0, counts
+    assert counts[[0, 2, 4]].min() > 0
+
+
+def test_congestion_shifts_traffic_away():
+    """A persistently growing queue on one of the comparable low-delay
+    paths must push that path out of the kept set (C_cong at work).
+
+    Note the deliberate topology: among paths with *similar* delay the
+    congestion term decides; across a 50x delay gap the paper's (3,1)
+    fusion keeps path quality dominant (tested above)."""
+    tb = tables.bootstrap_tables([100, 100, 100, 100], buffer_bytes=6 * 10**9)
+    sw = switchd.make_switch(tb, jnp.array([5_000, 5_000, 20_000, 20_000]),
+                             jnp.array([100, 100, 100, 100]),
+                             jnp.arange(4, dtype=jnp.int32), num_ports=4)
+    # port 0: queue grows every sample and stays above high water -> Q,T,D all fire
+    for i in range(300):
+        q = jnp.zeros(4, jnp.int32).at[0].set((4 + i // 40) * 10**9 // 1024)
+        sw = switchd.monitor_tick(sw, q, now_us=i * 100)
+    fids = (jnp.arange(2000, dtype=jnp.uint32) * jnp.uint32(48271) + 3)
+    sw, idx, _ = switchd.route_batch(sw, fids, now_us=30_100)
+    counts = np.bincount(np.asarray(idx), minlength=4)
+    assert counts[0] == 0, counts   # congested low-delay path filtered out
+    assert counts[1] > 0            # clean low-delay twin carries traffic
+
+
+def test_route_batch_jittable():
+    sw = _mk()
+    fids = jnp.arange(64, dtype=jnp.uint32)
+    f = jax.jit(lambda s, x: switchd.route_batch(s, x, now_us=0))
+    sw2, idx, new = f(sw, fids)
+    assert idx.shape == (64,)
+
+
+def test_flowcache_direct_mapped_collision_overwrite():
+    cache = fc.FlowCache.init(4)
+    ids = jnp.array([1, 2, 3, 4, 5], dtype=jnp.uint32)
+    cache = fc.insert(cache, ids, jnp.arange(5, dtype=jnp.int32), 0,
+                      jnp.ones(5, bool))
+    hit, out, _ = fc.lookup(cache, ids, jnp.ones(8, bool))
+    assert int(np.asarray(hit).sum()) <= 4  # bounded state
+
+
+def test_per_flow_and_per_port_storage_budget():
+    """Paper §4: 24 B/port, 20 B/flow, 50k flows ~= 1.2 MB."""
+    per_port = 4 + 4 + 4 + 4 + 8          # queueCur,queuePrev,trend,durCnt,lastSample
+    per_flow = 8 + 4 + 8                  # flowId, portIdx, lastSeen
+    assert per_port == 24 and per_flow == 20
+    assert 48 * per_port == 1152
+    assert abs(50_000 * 24 - 1.2e6) / 1.2e6 < 0.01

@@ -1,0 +1,125 @@
+"""Distribution-layer correctness, run in a subprocess with 8 host
+devices (the test process itself must keep the default 1-device jax, per
+the dry-run isolation rule — XLA device count locks at first init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.data.synth import batch_at
+from repro.dist.mesh_rules import Rules
+from repro.models.arch import init_params
+from repro.train.step import init_train_state, make_train_step
+from repro.train import checkpoint as ckpt
+
+results = {}
+
+# ---- sharded train step == single-device train step -----------------
+cfg = configs.get("qwen3_4b", smoke=True)
+params, opt = init_train_state(cfg, jax.random.key(0))
+step_fn = make_train_step(cfg)
+batch = batch_at(cfg, 0, batch=4, seq=32, host=0)
+
+p_ref, o_ref, m_ref = jax.jit(step_fn)(params, opt, batch)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rules = Rules(cfg, {"data": 2, "model": 4})
+pspecs = rules.param_specs(params)
+shard = lambda specs: jax.tree.map(
+    lambda s: NamedSharding(mesh, s), specs,
+    is_leaf=lambda s: isinstance(s, P))
+pshard = shard(pspecs)
+ospecs = type(opt)(count=P(), mu=pspecs, nu=pspecs)
+params_s = jax.device_put(params, pshard)
+opt_s = jax.device_put(opt, shard(ospecs))
+bspecs = rules.train_batch_specs(4, 32)
+batch_s = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
+           for k, v in batch.items()}
+with mesh:
+    p_sh, o_sh, m_sh = jax.jit(step_fn)(params_s, opt_s, batch_s)
+
+results["loss_match"] = bool(np.allclose(float(m_ref["loss"]),
+                                          float(m_sh["loss"]), rtol=2e-3))
+diffs = [float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+         for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_sh))]
+results["max_param_diff"] = max(diffs)
+results["params_match"] = max(diffs) < 5e-3
+
+# ---- LCMP pod-reduce == pmean over the pod axis -----------------------
+from repro.dist import lcmp_collectives as lc
+from jax import shard_map
+
+mesh2 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+g = {"a": jnp.arange(32.0).reshape(4, 8), "b": jnp.ones((16,)) * 3}
+
+def red_lcmp(x):
+    return lc.lcmp_pod_reduce(x, "pod")
+
+def red_ref(x):
+    return jax.tree.map(lambda v: jax.lax.pmean(v, "pod"), x)
+
+sm = lambda f: shard_map(f, mesh=mesh2, in_specs=P("pod"),
+                         out_specs=P("pod"), check_vma=False)
+gx = {"a": jnp.stack([g["a"], g["a"] * 2]), "b": jnp.stack([g["b"], g["b"] * 5])}
+want = jax.jit(sm(red_ref))(gx)
+got = jax.jit(sm(red_lcmp))(gx)
+results["lcmp_reduce_match"] = all(
+    bool(np.allclose(np.asarray(a), np.asarray(b), rtol=1e-5))
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)))
+
+# ---- compressed reduce: 4x fewer wire bytes, bounded error ------------
+big = jax.random.normal(jax.random.key(1), (2, 1 << 16))
+def red_c(x):
+    return lc.lcmp_pod_reduce({"g": x}, "pod", compress=True)["g"]
+smc = shard_map(red_c, mesh=mesh2, in_specs=P("pod"), out_specs=P("pod"),
+                check_vma=False)
+got_c = jax.jit(smc)(big)
+want_c = jnp.broadcast_to(big.mean(0), big.shape)
+err = float(jnp.max(jnp.abs(got_c - want_c)))
+scale = float(jnp.max(jnp.abs(big))) / 127
+results["compress_err_ok"] = err <= 2.1 * scale
+
+# ---- checkpoint roundtrip + elastic re-shard --------------------------
+import tempfile
+with tempfile.TemporaryDirectory() as d:
+    path = ckpt.save(d, 7, p_sh, pspecs)
+    assert ckpt.latest(d)[0] == 7
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"))   # DIFFERENT mesh
+    rules_b = Rules(cfg, {"data": 4, "model": 2})
+    restored = ckpt.restore(path, p_sh, mesh=mesh_b,
+                            specs=rules_b.param_specs(params))
+    diffs = [float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+             for a, b in zip(jax.tree.leaves(p_sh), jax.tree.leaves(restored))]
+    results["elastic_restore_match"] = max(diffs) == 0.0
+
+print("RESULTS:" + json.dumps(results))
+"""
+
+
+def test_distributed_correctness():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), env=env,
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULTS:")]
+    assert line, out.stdout + out.stderr[-2000:]
+    res = json.loads(line[0][len("RESULTS:"):])
+    assert res["loss_match"], res
+    assert res["params_match"], res
+    assert res["lcmp_reduce_match"], res
+    assert res["compress_err_ok"], res
+    assert res["elastic_restore_match"], res

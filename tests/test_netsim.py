@@ -1,0 +1,135 @@
+"""Simulator correctness: single-flow ideality, conservation, routing
+behavior, failover, and topology invariants. All runs are tiny (fast)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.netsim import fluid, metrics, paths, topo
+from repro.netsim.experiment import ExpSpec, build_experiment, run_experiment
+from repro.netsim.fluid import SimConfig
+from repro.traffic.gen import FlowSet
+
+
+def _single_flow_setup(size=1e6, cap=100, delay=5000):
+    t = topo.parallel_paths(caps=(cap,), delays_us=(delay,))
+    table = paths.build_path_table(t, [(0, 2)])
+    fluid.attach_link_caps(table, t)
+    flows = FlowSet(arrival_us=np.array([1000], np.int64),
+                    size_bytes=np.array([size]),
+                    pair_id=np.array([0], np.int32),
+                    flow_id=np.array([42], np.uint32))
+    return table, flows
+
+
+@pytest.mark.parametrize("policy", ["lcmp", "ecmp"])
+def test_single_flow_fct_close_to_ideal(policy):
+    table, flows = _single_flow_setup()
+    cfg = SimConfig(policy=policy, horizon_us=200_000, cap_scale=1.0)
+    arrs, st = fluid.build(table, flows, cfg)
+    final = fluid.run(arrs, st, cfg)
+    stats = metrics.fct_stats(final, table, flows, cfg)
+    assert stats.completed == 1
+    # alone in the network: slowdown within discretization error of ideal
+    assert stats.p50 < 1.1, stats.p50
+
+
+def test_flow_bytes_conservation():
+    """Served bytes on the first-hop link ~= flow size (fluid accounting)."""
+    table, flows = _single_flow_setup(size=5e6)
+    cfg = SimConfig(policy="ecmp", horizon_us=300_000, cap_scale=1.0)
+    arrs, st = fluid.build(table, flows, cfg)
+    final = fluid.run(arrs, st, cfg)
+    first = int(table.path_first[0])
+    served = float(final.serv_bytes[first])
+    assert abs(served - 5e6) / 5e6 < 0.05
+
+
+def test_link_never_overserved():
+    spec = ExpSpec(topology="testbed8", load=0.8, policy="ecmp",
+                   duration_us=150_000)
+    stats, util, _ = run_experiment(spec)
+    assert (util <= 1.0 + 1e-6).all()
+
+
+def test_lcmp_beats_baselines_at_30pct():
+    """The paper's headline (Fig. 5 direction): LCMP lowers both median and
+    tail FCT slowdown vs ECMP and UCMP on the 8-DC testbed at 30% load."""
+    res = {}
+    for pol in ["ecmp", "ucmp", "lcmp"]:
+        spec = ExpSpec(topology="testbed8", load=0.3, policy=pol,
+                       duration_us=400_000, seed=7)
+        stats, _, _ = run_experiment(spec)
+        res[pol] = stats
+    assert res["lcmp"].p50 < res["ecmp"].p50
+    assert res["lcmp"].p50 < res["ucmp"].p50
+    assert res["lcmp"].p99 < res["ecmp"].p99
+    assert res["lcmp"].p99 < res["ucmp"].p99
+
+
+def test_ucmp_concentrates_ecmp_spreads_lcmp_avoids_slow():
+    """Fig. 1b placement patterns."""
+    longhaul = [0, 4, 8, 12, 16, 20]      # DC1->DC2..DC7 long-haul links
+    utils = {}
+    for pol in ["ecmp", "ucmp", "lcmp"]:
+        spec = ExpSpec(topology="testbed8", load=0.3, policy=pol,
+                       duration_us=300_000, seed=3)
+        _, util, _ = run_experiment(spec)
+        utils[pol] = util[longhaul]
+    # UCMP: only the two 200G paths (idx 0,1) carry traffic
+    assert utils["ucmp"][2:].max() < 0.01
+    assert utils["ucmp"][:2].min() > 0.02
+    # ECMP: every path carries traffic, including both 250ms ones
+    assert utils["ecmp"].min() > 0.01
+    # LCMP: the 250 ms paths (DC2 idx 0, DC7 idx 5) stay empty
+    assert utils["lcmp"][0] < 0.01 and utils["lcmp"][5] < 0.01
+
+
+def test_failover_rehashes_and_completes():
+    """Kill the 100G/5ms long-haul link mid-run: pinned flows must re-hash
+    (lazy fast-failover) and still complete; nothing re-lands on it."""
+    spec = ExpSpec(topology="testbed8", load=0.3, policy="lcmp",
+                   duration_us=300_000, seed=5)
+    t, table, flows, cfg = build_experiment(spec)
+    cfg = dataclasses.replace(cfg, fail_link=12, fail_at_us=100_000)
+    arrs, st = fluid.build(table, flows, cfg)
+    final = fluid.run(arrs, st, cfg)
+    done = np.asarray(final.done)
+    assert done.mean() > 0.95
+    # flows finishing after the failure cannot be on a path through link 12
+    path = np.asarray(final.flow_path)
+    uses12 = np.asarray((arrs.path_links == 12).any(-1))[np.maximum(path, 0)]
+    fct_end = np.asarray(final.fct_us) + flows.arrival_us
+    late = done & (flows.arrival_us > 100_000)
+    assert not uses12[late].any()
+
+
+def test_bso13_multipath_fraction_near_paper():
+    t = topo.bso_13dc()
+    table = paths.build_path_table(t, paths.all_pairs(t))
+    frac = paths.multipath_pair_fraction(table)
+    # paper: 20/78 = 25.6%; our stand-in is tuned to 26.3%
+    assert 0.20 <= frac <= 0.32, frac
+
+
+def test_path_table_invariants():
+    t = topo.testbed_8dc()
+    table = paths.build_path_table(t, [(0, 7)])
+    assert table.pair_ncand[0] == 6           # six candidate routes
+    firsts = table.path_first[table.pair_cand[0, :6]]
+    assert len(set(firsts.tolist())) == 6     # distinct first hops
+    # prop = sum of hop delays; cap = bottleneck
+    _, _, cap_a, del_a = t.arrays()
+    for p in range(table.num_paths):
+        hops = table.path_links[p][table.path_links[p] >= 0]
+        assert table.path_prop_us[p] == del_a[hops].sum()
+        assert table.path_cap[p] == cap_a[hops].min()
+
+
+@pytest.mark.parametrize("cc", ["dcqcn", "dctcp", "timely", "hpcc"])
+def test_cc_variants_run_and_complete(cc):
+    spec = ExpSpec(topology="testbed8", load=0.3, policy="lcmp", cc=cc,
+                   duration_us=200_000, seed=2)
+    stats, _, _ = run_experiment(spec)
+    assert stats.completed / stats.offered > 0.9
+    assert np.isfinite(stats.p50)
