@@ -13,6 +13,7 @@ import sys
 SCRIPT = r'''
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import repro  # installs the jax.shard_map forward-compat alias on jax 0.4.x
 import jax, jax.numpy as jnp, numpy as np
 from jax import shard_map
 from jax.sharding import PartitionSpec as P

@@ -1,0 +1,142 @@
+"""FSDP x TP sharding rules over the named production mesh axes.
+
+``Rules`` maps every pytree the training/serving stack materializes
+(params, optimizer state, train batches, decode caches) to logical
+``PartitionSpec`` trees:
+
+- ``model`` (tensor parallel): the output-feature dim of column-parallel
+  projections (wq/wk/wv, w_gate/w_up, in_proj, dt_proj), the
+  input-feature dim of row-parallel projections (wo, out_proj, w_down),
+  and the vocab dim of embed/lm_head;
+- ``data`` (FSDP): one remaining weight dim per leaf (largest divisible)
+  plus the batch dim of inputs and caches;
+- ``pod`` (data parallel across pods): batch only — parameters stay
+  replicated across pods and gradients cross the long haul through
+  ``repro.dist.lcmp_collectives`` instead of implicit all-reduces.
+
+Placement is validated leaf-by-leaf: an axis is only assigned to a dim
+it divides, so every ``repro.models.arch`` config shards cleanly on any
+mesh (falling back to replication for a dim, never erroring). Leaves
+stacked over the scanned layer axis (``layers`` / ``enc_layers``) never
+shard dim 0.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# leaf name -> which dim carries the tensor-parallel "model" axis
+_TP_LAST = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "dt_proj"}
+_TP_PENULT = {"wo", "out_proj", "w_down"}
+_TP_VOCAB = {"embed", "lm_head"}
+_STACKED = {"layers", "enc_layers"}       # leading dim = scanned layer axis
+
+
+def _key_name(k) -> str:
+    return str(getattr(k, "key", getattr(k, "name", k)))
+
+
+def axis_sizes_of(mesh) -> Dict[str, int]:
+    """{axis_name: size} for a jax Mesh (the Rules constructor input)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def make_rules(cfg, mesh) -> "Rules":
+    return Rules(cfg, axis_sizes_of(mesh))
+
+
+class Rules:
+    """Spec builders bound to one arch config + one mesh shape."""
+
+    def __init__(self, cfg, axis_sizes: Dict[str, int]):
+        self.cfg = cfg
+        self.axis_sizes = dict(axis_sizes)
+        self.data = int(axis_sizes.get("data", 1))
+        self.model = int(axis_sizes.get("model", 1))
+        self.pod = int(axis_sizes.get("pod", 1))
+
+    # ------------------------------------------------------------ batch
+    @property
+    def _dp_size(self) -> int:
+        return self.pod * self.data
+
+    def _batch_axes(self, batch: int):
+        """Axes for a batch dim (pods are plain data-parallel for inputs)."""
+        if self._dp_size <= 1 or batch % self._dp_size != 0:
+            return None
+        return ("pod", "data") if self.pod > 1 else "data"
+
+    def train_batch_specs(self, batch: int, seq: int) -> Dict[str, P]:
+        b = self._batch_axes(batch)
+        return {"tokens": P(b, None), "labels": P(b, None),
+                "extra": P(b, None, None)}
+
+    def decode_token_spec(self, batch: int) -> P:
+        return P(self._batch_axes(batch), None)
+
+    # ----------------------------------------------------------- params
+    def _leaf_spec(self, path, shape) -> P:
+        keys = [_key_name(k) for k in path]
+        name = keys[-1] if keys else ""
+        ndim = len(shape)
+        spec = [None] * ndim
+        reserved = {0} if keys and keys[0] in _STACKED and ndim else set()
+
+        def fits(dim: int, size: int) -> bool:
+            return (size > 1 and 0 <= dim < ndim and dim not in reserved
+                    and spec[dim] is None and shape[dim] % size == 0)
+
+        tp = None
+        if name in _TP_LAST:
+            tp = ndim - 1
+        elif name in _TP_PENULT:
+            tp = ndim - 2
+        elif name in _TP_VOCAB:
+            tp = 0
+        if tp is not None and fits(tp, self.model):
+            spec[tp] = "model"
+            reserved.add(tp)
+
+        if self.data > 1:
+            cands = [d for d in range(ndim) if fits(d, self.data)]
+            if cands:
+                spec[max(cands, key=lambda d: shape[d])] = "data"
+        return P(*spec)
+
+    def param_specs(self, params):
+        """PartitionSpec tree matching ``params`` (arrays or
+        ShapeDtypeStructs) leaf for leaf."""
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+        return jax.tree_util.tree_unflatten(
+            treedef,
+            [self._leaf_spec(path, leaf.shape) for path, leaf in leaves])
+
+    # ------------------------------------------------------------ cache
+    def _cache_leaf_spec(self, path, shape) -> P:
+        keys = [_key_name(k) for k in path]
+        name = keys[-1] if keys else ""
+        ndim = len(shape)
+        spec = [None] * ndim
+        b = self._batch_axes(shape[1]) if ndim >= 2 else None
+        if b is not None and ndim >= 2:
+            spec[1] = b
+        # head / state-channel dim gets tensor parallelism where it divides
+        tp = None
+        if name in ("k", "v") and ndim == 5:
+            tp = 3                        # (L, B, S, Kv, hd): kv heads
+        elif name == "conv" and ndim == 4:
+            tp = 3                        # (L, B, 3, Di): channels
+        elif name == "ssm" and ndim >= 4:
+            tp = 2                        # (L, B, Di|H, ...): inner dim
+        if (tp is not None and self.model > 1 and spec[tp] is None
+                and shape[tp] % self.model == 0):
+            spec[tp] = "model"
+        return P(*spec)
+
+    def cache_specs(self, cache):
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        return jax.tree_util.tree_unflatten(
+            treedef,
+            [self._cache_leaf_spec(path, leaf.shape) for path, leaf in leaves])

@@ -3,11 +3,14 @@
 Features exercised here (and by examples/quickstart.py):
 - host-mesh sharded train loop (FSDP x TP on available devices),
 - deterministic restart-safe data (step == cursor),
-- atomic checkpoint + auto-resume (--resume), emergency save on SIGTERM,
-- LCMP-scheduled cross-pod reduction when the mesh has a pod axis
-  (--pod-reduce lcmp|lcmp_int8), with per-step route telemetry updates,
-- straggler demotion: per-step wall time feeds the route trend register,
-  so persistently slow routes are demoted for *future* buckets.
+- atomic checkpoint (params + optimizer) + auto-resume (--resume),
+  emergency save on SIGTERM,
+- route telemetry: per-step wall time feeds the LCMP route trend
+  registers (straggler demotion — persistently slow routes are demoted
+  for *future* buckets). Explicit LCMP-scheduled cross-pod reduction
+  (TrainConfig.pod_reduce = lcmp|lcmp_int8 under shard_map) is
+  exercised by examples/multipod_grad_routes.py and tests/test_dist.py;
+  this jit launcher lets GSPMD insert the data-parallel reduction.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3_4b --smoke \
@@ -58,17 +61,21 @@ def main():
                        microbatches=args.microbatches)
     params, opt = init_train_state(cfg, jax.random.key(0))
     start = 0
-    if args.resume and args.ckpt and ckpt.latest(args.ckpt):
-        start, path = ckpt.latest(args.ckpt)
-        params = ckpt.restore(path + "/params" if False else path, params)
-        print(f"[resume] step {start} from {path}")
+    if args.resume and args.ckpt:
+        found = ckpt.latest(args.ckpt)
+        if found:
+            start, path = found
+            restored = ckpt.restore(path, {"params": params, "opt": opt})
+            params, opt = restored["params"], restored["opt"]
+            print(f"[resume] step {start} from {path}")
 
     pspecs = rules.param_specs(params)
+    ospecs = type(opt)(count=P(), mu=pspecs, nu=pspecs)
+    save_specs = {"params": pspecs, "opt": ospecs}
     shard = lambda sp: jax.tree.map(lambda s: NamedSharding(mesh, s), sp,
                                     is_leaf=lambda s: isinstance(s, P))
     params = jax.device_put(params, shard(pspecs))
-    opt = jax.device_put(opt, shard(type(opt)(count=P(), mu=pspecs,
-                                              nu=pspecs)))
+    opt = jax.device_put(opt, shard(ospecs))
     bspecs = rules.train_batch_specs(args.batch, args.seq)
     step_fn = jax.jit(make_train_step(cfg, tcfg))
 
@@ -77,7 +84,9 @@ def main():
 
     def on_term(signum, frame):
         if args.ckpt:
-            ckpt.save(args.ckpt, state["step"], state["params"], pspecs)
+            ckpt.save(args.ckpt, state["step"],
+                      {"params": state["params"], "opt": state["opt"]},
+                      save_specs)
             print(f"[sigterm] emergency checkpoint at step {state['step']}")
         raise SystemExit(1)
 
@@ -85,6 +94,7 @@ def main():
 
     with mesh:
         t_last = time.perf_counter()
+        last_log = start
         for step in range(start, args.steps):
             b = batch_at(cfg, step, batch=args.batch, seq=args.seq)
             b = {k: jax.device_put(v, NamedSharding(mesh, bspecs.get(k, P())))
@@ -96,14 +106,21 @@ def main():
                 jax.block_until_ready(metrics["loss"])
                 dt = time.perf_counter() - t_last
                 t_last = time.perf_counter()
-                # straggler/telemetry hook: step time -> route registers
-                lc._TELEMETRY.observe(
-                    np.full(lc.NUM_ROUTES, int(dt * 1e3)), int(step))
+                nsteps = max(step + 1 - last_log, 1)
+                last_log = step + 1
+                # straggler/telemetry hook: per-step wall time (ms) ->
+                # route trend registers. The first block is jit compile
+                # time, not route time — don't poison the registers.
+                if step != start:
+                    lc._TELEMETRY.observe(
+                        np.full(lc.NUM_ROUTES, int(dt * 1e3 / nsteps)),
+                        int(step))
                 print(f"step {step+1}: loss={float(metrics['loss']):.4f} "
                       f"gnorm={float(metrics['grad_norm']):.3f} "
-                      f"({dt:.2f}s/{args.log_every}steps)")
+                      f"({dt:.2f}s/{nsteps}steps)")
             if args.ckpt and (step + 1) % args.ckpt_every == 0:
-                ckpt.save(args.ckpt, step + 1, params, pspecs)
+                ckpt.save(args.ckpt, step + 1,
+                          {"params": params, "opt": opt}, save_specs)
     print("done")
 
 

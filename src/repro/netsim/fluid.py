@@ -15,7 +15,8 @@ Model (standard fluid FCT-benchmark abstractions):
   from ``t - RTT(path)`` via per-link history rings — the paper's
   "slow and easily outdated feedback" is modeled explicitly.
 - end-host CC is a pluggable rate law (DCQCN / DCTCP / TIMELY / HPCC
-  -like), all reacting to the delayed signals, MD gated once per RTT.
+  -like), all reacting to the delayed signals, MD gated by a reaction
+  timer (min of one RTT and ``cc_dec_period_us``).
 - the LCMP switch runs inside the loop: per-link Q/T/D registers are
   refreshed every ``dt`` (the monitor cadence) and new-flow batches run
   the exact ``repro.core`` decision path — a batch arriving in the same
@@ -58,6 +59,10 @@ class SimConfig:
     ecn_kmin_bytes: float = 4e5   # ECN mark threshold (scaled caps)
     ai_frac: float = 0.002        # additive increase per step, frac of line
     md_factor: float = 0.7        # multiplicative decrease
+    # MD reaction timer (us): real DCQCN/TIMELY decrease on a NIC timer,
+    # not once per RTT — on a 250 ms long-haul path a per-RTT gate would
+    # leave flows effectively uncontrolled. Feedback *delay* stays RTT.
+    cc_dec_period_us: int = 1_600
     redte_period_us: int = 100_000
     select: SelectParams = SelectParams()
     pathq: PathQParams = PathQParams()
@@ -83,6 +88,7 @@ class SimState:
     fct_us: jnp.ndarray        # (F,) f32
     extra_wait: jnp.ndarray    # (F,) f32 queue-wait component
     rtt_steps: jnp.ndarray     # (F,) i32
+    route_step: jnp.ndarray    # (F,) i32 step the flow was (re)routed at
     last_dec: jnp.ndarray      # (F,) i32 step of last MD
     cc_alpha: jnp.ndarray      # (F,) f32 (DCTCP EWMA)
     cc_target: jnp.ndarray     # (F,) f32 (DCQCN target rate / fast recovery)
@@ -178,6 +184,7 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
         fct_us=jnp.zeros((F,), jnp.float32),
         extra_wait=jnp.zeros((F,), jnp.float32),
         rtt_steps=jnp.ones((F,), jnp.int32),
+        route_step=jnp.full((F,), 1 << 20, jnp.int32),   # sentinel: unrouted
         last_dec=jnp.full((F,), -(1 << 20), jnp.int32),
         cc_alpha=jnp.zeros((F,), jnp.float32),
         cc_target=jnp.zeros((F,), jnp.float32),
@@ -276,6 +283,8 @@ def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
         active=upd(st.active, ok, ok),
         extra_wait=upd(st.extra_wait, qw, ok),
         rtt_steps=upd(st.rtt_steps, rtt.astype(jnp.int32), ok),
+        route_step=upd(st.route_step,
+                       jnp.full(fidx.shape, 0, jnp.int32) + t, ok),
     )
     return st
 
@@ -295,7 +304,12 @@ def _cc_update(t, st: SimState, ar: SimArrays, cfg: SimConfig,
       backlogged flows each AI-ing a line-rate fraction diverge.
     """
     slot = jnp.asarray((t - st.rtt_steps) % HIST, jnp.int32)
-    have_fb = t > st.rtt_steps
+    # Feedback exists only once the flow's own first packets have had a
+    # full RTT on its *current* path: gate on steps since the flow's
+    # routing step, not the global clock — otherwise a flow arriving at
+    # t >> RTT immediately reads congestion history recorded *before* it
+    # was routed (stale signals from traffic it never shared a path with).
+    have_fb = (t - st.route_step) > st.rtt_steps
     lidx = jnp.maximum(links_f, 0)                              # (F,H)
     flat = lidx * HIST + slot[:, None]
     q_sig = jnp.where(links_ok, st.hist_q.reshape(-1)[flat], 0.0).max(-1)
@@ -307,7 +321,14 @@ def _cc_update(t, st: SimState, ar: SimArrays, cfg: SimConfig,
     # the CC control loop operates per RTT; discretize increments per step
     inv_rtt = 1.0 / st.rtt_steps.astype(jnp.float32)
     ai = cfg.ai_frac * line * inv_rtt          # ai_frac = per-RTT probe frac
-    can_dec = (t - st.last_dec) >= st.rtt_steps
+    # MD cadence: a reaction timer, never slower than one per RTT and
+    # never faster than ~8 decreases per feedback epoch (the rtt//8
+    # floor bounds how often a flow can cut on the *same* stale signal)
+    dec_gap = jnp.minimum(
+        st.rtt_steps,
+        jnp.maximum(max(cfg.cc_dec_period_us // cfg.dt_us, 1),
+                    st.rtt_steps // 8))
+    can_dec = (t - st.last_dec) >= dec_gap
 
     # RED-style marking probability from the delayed queue signal
     kmin = cfg.ecn_kmin_bytes * cfg.cap_scale
@@ -491,6 +512,7 @@ def _reroute_dead(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> SimState:
         rtt_steps=jnp.where(
             ok, jnp.maximum(2 * ar.path_prop[jnp.maximum(new_path, 0)]
                             // cfg.dt_us, 1).astype(jnp.int32), st.rtt_steps),
+        route_step=jnp.where(ok, jnp.int32(0) + t, st.route_step),
         active=jnp.where(move & (k_idx < 0), False, st.active))
 
 

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 from typing import Any, Optional, Tuple
 
@@ -60,16 +61,23 @@ def save(ckpt_dir: str, step: int, tree: Any, specs: Any = None) -> str:
     return final
 
 
+_STEP_DIR = re.compile(r"^step-(\d{8})$")
+
+
 def latest(ckpt_dir: str) -> Optional[Tuple[int, str]]:
-    """Newest complete checkpoint (auto-resume entry point)."""
+    """Newest complete checkpoint (auto-resume entry point).
+
+    Only exact ``step-<8 digits>`` names count: an interrupted save
+    leaves a ``step-XXXXXXXX.tmp-<host>`` dir behind (possibly with a
+    MANIFEST inside) and must never be picked up or crash the scan."""
     if not os.path.isdir(ckpt_dir):
         return None
     best = None
     for d in sorted(os.listdir(ckpt_dir)):
+        m = _STEP_DIR.match(d)
         full = os.path.join(ckpt_dir, d)
-        if d.startswith("step-") and not d.endswith(".tmp") \
-                and os.path.exists(os.path.join(full, "MANIFEST.json")):
-            best = (int(d.split("-")[1]), full)
+        if m and os.path.exists(os.path.join(full, "MANIFEST.json")):
+            best = (int(m.group(1)), full)
     return best
 
 

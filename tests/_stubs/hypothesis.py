@@ -1,0 +1,157 @@
+"""Minimal stand-in for the slice of the ``hypothesis`` API this suite
+uses (``given``, ``settings``, ``strategies.integers/lists``).
+
+NOT a property-testing engine — no shrinking, no example database, no
+coverage guidance. Each ``@given`` test runs ``max_examples`` times:
+example 0 is all-minimum bounds, example 1 all-maximum bounds, the rest
+are uniform draws from a PRNG seeded by the test's qualified name (fully
+deterministic across runs). Only loaded via tests/conftest.py when the
+real ``hypothesis`` (requirements-dev.txt) is not importable.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def min_example(self):
+        raise NotImplementedError
+
+    def max_example(self):
+        raise NotImplementedError
+
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def min_example(self):
+        return self.lo
+
+    def max_example(self):
+        return self.hi
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def min_example(self):
+        return self.lo
+
+    def max_example(self):
+        return self.hi
+
+    def example(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(_Strategy):
+    def min_example(self):
+        return False
+
+    def max_example(self):
+        return True
+
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def min_example(self):
+        return self.elements[0]
+
+    def max_example(self):
+        return self.elements[-1]
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem, min_size=0, max_size=None):
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def min_example(self):
+        return [self.elem.min_example()] * max(self.min_size, 1) \
+            if self.min_size else []
+
+    def max_example(self):
+        return [self.elem.max_example()] * self.max_size
+
+    def example(self, rng):
+        k = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng) for _ in range(k)]
+
+
+class _StrategiesNamespace:
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None, **_):
+        return _Lists(elements, min_size, max_size)
+
+
+strategies = _StrategiesNamespace()
+
+
+class settings:  # noqa: N801 (mirrors hypothesis' lowercase class)
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(fn.__qualname__)
+            for i in range(n):
+                if i == 0:
+                    args = [s.min_example() for s in strats]
+                elif i == 1:
+                    args = [s.max_example() for s in strats]
+                else:
+                    args = [s.example(rng) for s in strats]
+                fn(*args)
+
+        # pytest must see a zero-arg test, not the wrapped signature
+        # (else the strategy parameters look like missing fixtures)
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

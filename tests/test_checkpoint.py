@@ -1,0 +1,78 @@
+"""Checkpoint robustness + launcher auto-resume coverage."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.train import checkpoint as ckpt
+from repro.train.step import init_train_state
+
+
+def test_latest_ignores_interrupted_tmp_dirs(tmp_path):
+    """Regression: a leftover ``step-XXXXXXXX.tmp-<host>`` dir from an
+    interrupted save (which can contain a MANIFEST) used to crash
+    ``latest()`` with ValueError on ``int("00000007.tmp")``."""
+    d = str(tmp_path)
+    tree = {"w": np.arange(6.0).reshape(2, 3)}
+    path = ckpt.save(d, 7, tree)
+
+    stale = tmp_path / "step-00000009.tmp-0"
+    stale.mkdir()
+    (stale / "MANIFEST.json").write_text("{}")
+    (tmp_path / "step-garbage").mkdir()
+    (tmp_path / "step-00000012").mkdir()          # no MANIFEST: incomplete
+
+    assert ckpt.latest(d) == (7, path)
+
+
+def test_latest_none_cases(tmp_path):
+    assert ckpt.latest(str(tmp_path / "missing")) is None
+    assert ckpt.latest(str(tmp_path)) is None
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = {"a": np.arange(8.0), "b": {"c": np.ones((3,), np.int32)}}
+    path = ckpt.save(str(tmp_path), 3, tree)
+    out = ckpt.restore(path, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _run_train(argv, monkeypatch):
+    from repro.launch.train import main
+    monkeypatch.setattr(sys, "argv", ["train"] + argv)
+    main()
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b"])
+def test_train_resume_restores_params_and_opt(tmp_path, monkeypatch, capsys,
+                                              arch):
+    """--resume must pick up the latest checkpoint once and restore the
+    optimizer state alongside the params (the dead-conditional resume
+    path used to restore params only)."""
+    d = str(tmp_path / "ck")
+    common = ["--arch", arch, "--smoke", "--batch", "2", "--seq", "16",
+              "--ckpt", d, "--ckpt-every", "2", "--log-every", "10"]
+    _run_train(common + ["--steps", "2"], monkeypatch)
+    found = ckpt.latest(d)
+    assert found and found[0] == 2
+
+    # the checkpoint carries the optimizer: count must equal the step
+    cfg = configs.get(arch, smoke=True)
+    params, opt = init_train_state(cfg, jax.random.key(0))
+    saved = ckpt.restore(found[1], {"params": params, "opt": opt})
+    assert int(saved["opt"].count) == 2
+    assert any(float(np.abs(np.asarray(m)).sum()) > 0
+               for m in jax.tree.leaves(saved["opt"].mu))
+
+    capsys.readouterr()
+    _run_train(common + ["--steps", "4", "--resume"], monkeypatch)
+    out = capsys.readouterr().out
+    assert f"[resume] step 2 from {found[1]}" in out
+    found2 = ckpt.latest(d)
+    assert found2 and found2[0] == 4
+    saved2 = ckpt.restore(found2[1], {"params": params, "opt": opt})
+    assert int(saved2["opt"].count) == 4          # optimizer kept counting

@@ -1,0 +1,131 @@
+"""Fast 1-device tests for the ``repro.dist`` layer (the 8-device
+subprocess contract lives in tests/test_dist.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.dist import compress
+from repro.dist import lcmp_collectives as lc
+from repro.dist.mesh_rules import Rules, axis_sizes_of, make_rules
+from repro.models.arch import init_params
+
+AXES = {"data": 2, "model": 4}
+
+
+# ----------------------------------------------------------- mesh rules
+@pytest.mark.parametrize("arch", ["qwen3_4b", "mixtral_8x7b",
+                                  "falcon_mamba_7b", "zamba2_1p2b",
+                                  "whisper_medium", "internvl2_2b"])
+def test_param_specs_cover_every_leaf_and_divide(arch):
+    cfg = configs.get(arch, smoke=True)
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    specs = Rules(cfg, AXES).param_specs(params)
+    pl = jax.tree.leaves(params)
+    sl = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(pl) == len(sl)
+    for leaf, spec in zip(pl, sl):
+        assert isinstance(spec, P) and len(spec) <= leaf.ndim
+        named = [a for a in spec if a is not None]
+        assert len(set(named)) == len(named)          # no axis used twice
+        for d, ax in enumerate(spec):
+            if ax is not None:
+                assert leaf.shape[d] % AXES[ax] == 0  # always placeable
+
+
+def test_param_specs_tp_on_big_matmuls():
+    cfg = configs.get("qwen3_4b", smoke=True)
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    specs = Rules(cfg, AXES).param_specs(params)
+    attn = specs["layers"]["attn"]
+    assert attn["wq"][-1] == "model" and attn["wo"][-2] == "model"
+    assert specs["layers"]["mlp"]["w_up"][-1] == "model"
+    assert specs["embed"][0] == "model"
+    # stacked layer axis never sharded
+    assert attn["wq"][0] is None
+
+
+def test_batch_specs_and_axis_sizes_roundtrip():
+    cfg = configs.get("qwen3_4b", smoke=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert axis_sizes_of(mesh) == {"data": 1, "model": 1}
+    rules = make_rules(cfg, mesh)
+    bs = rules.train_batch_specs(8, 32)
+    assert set(bs) >= {"tokens", "labels"}
+    # pod axis joins data parallelism for inputs; indivisible batch -> replicate
+    r2 = Rules(cfg, {"pod": 2, "data": 2, "model": 1})
+    assert r2.train_batch_specs(8, 32)["tokens"][0] == ("pod", "data")
+    assert r2.train_batch_specs(6, 32)["tokens"][0] is None
+    assert r2.decode_token_spec(8)[0] == ("pod", "data")
+
+
+# ------------------------------------------------------- lcmp pod reduce
+def test_pod_reduce_noop_without_pod_axis():
+    tree = {"a": jnp.arange(8.0), "b": jnp.ones((3, 5))}
+    out = lc.lcmp_pod_reduce(tree, "pod")         # axis unbound: identity
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a is b
+    assert lc.lcmp_pod_reduce(tree, None) is tree
+    out_jit = jax.jit(lambda t: lc.lcmp_pod_reduce(t, "pod"))(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out_jit)):
+        assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- compress
+def test_compress_roundtrip_error_within_one_step():
+    x = jax.random.normal(jax.random.key(0), (4096,))
+    w = compress.encode(x, seed=3)
+    y = compress.decode(w)
+    step = float(jnp.max(w.scales))               # one quantization step
+    assert y.shape == x.shape
+    assert float(jnp.max(jnp.abs(y - x))) <= step + 1e-7
+    assert compress.wire_bytes(w) < 0.3 * 4 * x.size   # ~4x fewer bytes
+
+
+def test_compress_handles_unaligned_length_and_ef_identity():
+    x = jax.random.normal(jax.random.key(1), (1500,))  # not a BLOCK multiple
+    w = compress.encode(x, seed=5)
+    assert compress.decode(w).shape == x.shape
+    wef, resid = compress.encode_ef(x, jnp.zeros_like(x), seed=5)
+    np.testing.assert_allclose(np.asarray(compress.decode(wef) + resid),
+                               np.asarray(x), atol=1e-6)
+
+
+# ------------------------------------------------- route scheduling/telemetry
+@pytest.fixture
+def fresh_telemetry():
+    lc._TELEMETRY.reset()
+    yield lc._TELEMETRY
+    lc._TELEMETRY.reset()
+
+
+def test_schedule_buckets_keeps_low_cost_half(fresh_telemetry):
+    ids = lc._fmix32_host(np.arange(64, dtype=np.uint32))
+    routes = lc.schedule_buckets(ids)
+    cost = lc.ALPHA * lc.C_PATH + lc.BETA * fresh_telemetry.cong_scores()
+    kept = set(np.argsort(cost, kind="stable")[: (lc.NUM_ROUTES + 1) // 2])
+    assert set(routes.tolist()) <= kept
+    np.testing.assert_array_equal(routes, lc.schedule_buckets(ids))  # sticky
+
+
+def test_schedule_buckets_skips_dead_routes(fresh_telemetry):
+    ids = lc._fmix32_host(np.arange(64, dtype=np.uint32))
+    alive = np.ones(lc.NUM_ROUTES, bool)
+    alive[lc.schedule_buckets(ids)[0]] = False    # kill a chosen route
+    lc.set_route_liveness(alive)
+    assert not set(lc.schedule_buckets(ids).tolist()) & set(
+        np.nonzero(~alive)[0].tolist())
+    lc.set_route_liveness(np.zeros(lc.NUM_ROUTES, bool))
+    assert (lc.schedule_buckets(ids) == -1).all()
+
+
+def test_telemetry_straggler_trend_raises_cong_score(fresh_telemetry):
+    tm = fresh_telemetry
+    base = tm.cong_scores().copy()
+    for step in range(12):                        # route 1 straggles
+        tm.observe([50, 900, 50], step)
+    after = tm.cong_scores()
+    assert after[1] > base[1]
+    assert after[1] > after[0] and after[1] > after[2]
