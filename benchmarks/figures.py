@@ -1,18 +1,23 @@
 """One benchmark per paper table/figure (LCMP, EuroSys'26).
 
 Each function returns a list of CSV rows ``(name, us_per_call, derived)``
-where ``us_per_call`` is the wall-clock of the underlying sim run and
-``derived`` packs the figure's key numbers. Full CSVs are also written to
-benchmarks/out/.
+and writes full CSVs to benchmarks/out/. Every figure's grid now runs
+through ``repro.netsim.sweep``: cells sharing a trace (same scenario /
+cc / parameter overrides — policy, seed and workload are dynamic axes,
+loads chunk on a padding budget) execute as a few compiled XLA
+computations instead of a Python loop of re-traced ``fluid.run`` calls. ``us_per_call`` is therefore the group wall-clock
+amortized over its cells; each figure also emits a ``<fig>/sweep``
+summary row with the total wall-clock and group count, so the CSV stream
+records the sweep-engine speedup over time.
 
 Reduced-scale defaults (duration, cap_scale) keep the whole suite
-CPU-tractable; pass scale="full" for paper-scale horizons.
+CPU-tractable; pass scale="full" for paper-scale horizons. Pass
+``sequential=True`` (or ``--sequential`` on benchmarks.run) to run the
+pre-sweep per-cell loop — the before/after comparison baseline.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
-import time
 from typing import List, Tuple
 
 import numpy as np
@@ -20,15 +25,14 @@ import numpy as np
 from repro.core.cong import CongParams
 from repro.core.pathq import PathQParams
 from repro.core.select import SelectParams
-from repro.netsim.experiment import ExpSpec, build_experiment, run_experiment
-from repro.netsim import fluid, metrics
+from repro.netsim.experiment import ExpSpec, build_world
+from repro.netsim.sweep import run_sweep
 
 OUT = os.path.join(os.path.dirname(__file__), "out")
 Row = Tuple[str, float, str]
 
 _DUR = {"quick": 300_000, "default": 400_000, "full": 1_500_000}
 _SIZE_EDGES = [0, 3e3, 1e4, 3e4, 1e5, 1e6, 1e7, 1e9]
-
 
 def _csv(name: str, header: str, rows: List[str]) -> None:
     os.makedirs(OUT, exist_ok=True)
@@ -37,140 +41,165 @@ def _csv(name: str, header: str, rows: List[str]) -> None:
         f.writelines(r + "\n" for r in rows)
 
 
-def _run(spec: ExpSpec):
-    t0 = time.perf_counter()
-    stats, util, extra = run_experiment(spec)
-    return stats, util, extra, (time.perf_counter() - t0) * 1e6
+def _sweep(figname: str, specs: List[ExpSpec], sequential: bool):
+    """Run a figure's grid through the sweep engine; returns (results,
+    per-cell us, summary row)."""
+    rep = run_sweep(specs, sequential=sequential)
+    total_us = rep.wall_s * 1e6
+    per_cell = total_us / max(rep.num_cells, 1)
+    mode = "sequential" if sequential else "batched"
+    summary = (f"{figname}/sweep", total_us,
+               f"mode={mode};cells={rep.num_cells};groups={rep.num_groups}")
+    return rep.results, per_cell, summary
 
 
 # ------------------------------------------------------------------ Figure 1
-def fig1_link_utilization(scale="default") -> List[Row]:
+def fig1_link_utilization(scale="default", sequential=False) -> List[Row]:
     """[Motivation] per-link utilization under ECMP/UCMP/LCMP, 8-DC, 30%."""
-    rows, csv = [], []
     longhaul = {"DC1-DC2": 0, "DC1-DC3": 4, "DC1-DC4": 8,
                 "DC1-DC5": 12, "DC1-DC6": 16, "DC1-DC7": 20}
-    for pol in ["ecmp", "ucmp", "lcmp"]:
-        spec = ExpSpec(topology="testbed8", load=0.3, policy=pol,
-                       duration_us=_DUR[scale])
-        stats, util, _, us = _run(spec)
-        u = {k: float(util[i]) for k, i in longhaul.items()}
-        csv += [f"{pol},{k},{v:.4f}" for k, v in u.items()]
-        rows.append((f"fig1/{pol}", us,
+    pols = ["ecmp", "ucmp", "lcmp"]
+    specs = [ExpSpec(topology="testbed8", load=0.3, policy=pol,
+                     duration_us=_DUR[scale]) for pol in pols]
+    results, per_cell, summary = _sweep("fig1", specs, sequential)
+    rows, csv = [summary], []
+    for res in results:
+        u = {k: float(res.util[i]) for k, i in longhaul.items()}
+        csv += [f"{res.spec.policy},{k},{v:.4f}" for k, v in u.items()]
+        rows.append((f"fig1/{res.spec.policy}", per_cell,
                      "util=" + "|".join(f"{v:.3f}" for v in u.values())))
     _csv("fig1_utilization.csv", "policy,link,utilization", csv)
     return rows
 
 
 # ------------------------------------------------------------------ Figure 5
-def fig5_testbed_fct(scale="default") -> List[Row]:
-    """Median/P99 FCT slowdown, Web Search, 8-DC testbed, 30/50/80% load."""
-    rows, csv = [], []
-    for load in [0.3, 0.5, 0.8]:
-        for pol in ["ecmp", "ucmp", "redte", "lcmp", "lcmp_w"]:
-            spec = ExpSpec(topology="testbed8", load=load, policy=pol,
-                           duration_us=_DUR[scale])
-            stats, _, _, us = _run(spec)
-            csv.append(f"{load},{pol},{stats.p50:.3f},{stats.p99:.3f},"
-                       f"{stats.completed}")
-            rows.append((f"fig5/load{int(load*100)}/{pol}", us,
-                         f"p50={stats.p50:.2f};p99={stats.p99:.2f}"))
+def fig5_testbed_fct(scale="default", sequential=False) -> List[Row]:
+    """Median/P99 FCT slowdown, Web Search, 8-DC testbed, 30/50/80% load.
+
+    Each load's 5-policy row shares one trace; loads chunk by flow count."""
+    specs = [ExpSpec(topology="testbed8", load=load, policy=pol,
+                     duration_us=_DUR[scale])
+             for load in [0.3, 0.5, 0.8]
+             for pol in ["ecmp", "ucmp", "redte", "lcmp", "lcmp_w"]]
+    results, per_cell, summary = _sweep("fig5", specs, sequential)
+    rows, csv = [summary], []
+    for res in results:
+        s, st = res.spec, res.stats
+        csv.append(f"{s.load},{s.policy},{st.p50:.3f},{st.p99:.3f},"
+                   f"{st.completed}")
+        rows.append((f"fig5/load{int(s.load*100)}/{s.policy}", per_cell,
+                     f"p50={st.p50:.2f};p99={st.p99:.2f}"))
     _csv("fig5_testbed.csv", "load,policy,p50,p99,completed", csv)
     return rows
 
 
 # ------------------------------------------------------------------ Figure 6
-def fig6_fidelity(scale="default") -> List[Row]:
+def fig6_fidelity(scale="default", sequential=False) -> List[Row]:
     """[Simulator fidelity] The paper correlates testbed vs NS-3 (r>=0.95).
     Without hardware we check the analogous internal-consistency property:
     per-policy slowdowns correlate across independent seeds (determinism +
     stability of the simulation platform)."""
-    rows, csv = [], []
-    xs, ys = [], []
+    cells = [(pol, load, seed)
+             for pol in ["ecmp", "ucmp", "lcmp"]
+             for load in [0.3, 0.5] for seed in (1, 2)]
+    specs = [ExpSpec(topology="testbed8", load=load, policy=pol, seed=seed,
+                     duration_us=_DUR["quick"]) for pol, load, seed in cells]
+    results, _, summary = _sweep("fig6", specs, sequential)
+    by = {cell: res.stats for cell, res in zip(cells, results)}
+    xs, ys, csv = [], [], []
     for pol in ["ecmp", "ucmp", "lcmp"]:
         for load in [0.3, 0.5]:
-            a = _run(dataclasses.replace(
-                ExpSpec(topology="testbed8", load=load, policy=pol,
-                        duration_us=_DUR["quick"]), seed=1))[0]
-            b = _run(dataclasses.replace(
-                ExpSpec(topology="testbed8", load=load, policy=pol,
-                        duration_us=_DUR["quick"]), seed=2))[0]
+            a, b = by[(pol, load, 1)], by[(pol, load, 2)]
             xs += [a.p50, a.p99]
             ys += [b.p50, b.p99]
-            csv.append(f"{pol},{load},{a.p50:.3f},{b.p50:.3f},{a.p99:.3f},{b.p99:.3f}")
+            csv.append(f"{pol},{load},{a.p50:.3f},{b.p50:.3f},"
+                       f"{a.p99:.3f},{b.p99:.3f}")
     r = float(np.corrcoef(np.log(xs), np.log(ys))[0, 1])
-    _csv("fig6_fidelity.csv", "policy,load,p50_seed1,p50_seed2,p99_seed1,p99_seed2", csv)
-    return [("fig6/seed-correlation", 0.0, f"pearson_log={r:.3f}")]
+    _csv("fig6_fidelity.csv",
+         "policy,load,p50_seed1,p50_seed2,p99_seed1,p99_seed2", csv)
+    return [summary, ("fig6/seed-correlation", 0.0, f"pearson_log={r:.3f}")]
 
 
 # -------------------------------------------------------------- Figures 7+8
-def fig7_8_large_scale(scale="default") -> List[Row]:
+def fig7_8_large_scale(scale="default", sequential=False) -> List[Row]:
     """13-DC all-to-all system-wide (Fig. 7) + the multi-path DC-pair case
     study (Fig. 8) extracted from the same runs."""
-    rows, csv7, csv8 = [], [], []
-    for load in [0.3, 0.5, 0.8]:
-        for pol in ["ecmp", "ucmp", "redte", "lcmp"]:
-            spec = ExpSpec(topology="bso13", load=load, policy=pol,
-                           pairs="all", duration_us=_DUR[scale],
-                           cap_scale=0.0625)
-            stats, _, (t, table, flows, cfg, final), us = _run(spec)
-            csv7.append(f"{load},{pol},{stats.p50:.3f},{stats.p99:.3f}")
-            rows.append((f"fig7/load{int(load*100)}/{pol}", us,
-                         f"p50={stats.p50:.2f};p99={stats.p99:.2f}"))
-            # Fig 8: restrict to a pair with multiple near-equal candidates
-            pidx = table.pair_index()
-            import numpy as _np
-            multi = _np.nonzero(table.pair_ncand >= 3)[0]
-            sel = _np.isin(flows.pair_id, multi)
-            done = _np.asarray(final.done) & sel
-            if done.sum() > 20:
-                prop = table.pair_ideal_prop[flows.pair_id].astype(float)
-                cap = table.pair_ideal_cap[flows.pair_id] * 125.0 * cfg.cap_scale
-                ideal = prop + flows.size_bytes / cap
-                sl = _np.maximum(_np.asarray(final.fct_us)[done] / ideal[done], 1)
-                p50, p99 = _np.percentile(sl, 50), _np.percentile(sl, 99)
-                csv8.append(f"{load},{pol},{p50:.3f},{p99:.3f}")
-                rows.append((f"fig8/load{int(load*100)}/{pol}", us,
-                             f"p50={p50:.2f};p99={p99:.2f}"))
+    specs = [ExpSpec(topology="bso13", load=load, policy=pol, pairs="all",
+                     duration_us=_DUR[scale], cap_scale=0.0625)
+             for load in [0.3, 0.5, 0.8]
+             for pol in ["ecmp", "ucmp", "redte", "lcmp"]]
+    results, per_cell, summary = _sweep("fig7_8", specs, sequential)
+    _, table = build_world("bso13")
+    multi = np.nonzero(table.pair_ncand >= 3)[0]
+    rows, csv7, csv8 = [summary], [], []
+    for res in results:
+        s, st = res.spec, res.stats
+        csv7.append(f"{s.load},{s.policy},{st.p50:.3f},{st.p99:.3f}")
+        rows.append((f"fig7/load{int(s.load*100)}/{s.policy}", per_cell,
+                     f"p50={st.p50:.2f};p99={st.p99:.2f}"))
+        # Fig 8: restrict to pairs with multiple near-equal candidates
+        sel = np.isin(res.flows.pair_id, multi)
+        done = res.final.done & sel
+        if done.sum() > 20:
+            prop = table.pair_ideal_prop[res.flows.pair_id].astype(float)
+            cap = table.pair_ideal_cap[res.flows.pair_id] * 125.0 * s.cap_scale
+            ideal = prop + res.flows.size_bytes / cap
+            sl = np.maximum(res.final.fct_us[done] / ideal[done], 1)
+            p50, p99 = np.percentile(sl, 50), np.percentile(sl, 99)
+            csv8.append(f"{s.load},{s.policy},{p50:.3f},{p99:.3f}")
+            rows.append((f"fig8/load{int(s.load*100)}/{s.policy}", per_cell,
+                         f"p50={p50:.2f};p99={p99:.2f}"))
     _csv("fig7_system_wide.csv", "load,policy,p50,p99", csv7)
     _csv("fig8_dcpair.csv", "load,policy,p50,p99", csv8)
     return rows
 
 
 # ------------------------------------------------------------------ Figure 9
-def fig9_workloads(scale="default") -> List[Row]:
-    rows, csv = [], []
-    for wl in ["websearch", "fbhdp", "alistorage"]:
-        for pol in ["ecmp", "ucmp", "lcmp"]:
-            spec = ExpSpec(topology="testbed8", workload=wl, load=0.3,
-                           policy=pol, duration_us=_DUR[scale])
-            stats, _, _, us = _run(spec)
-            csv.append(f"{wl},{pol},{stats.p50:.3f},{stats.p99:.3f}")
-            rows.append((f"fig9/{wl}/{pol}", us,
-                         f"p50={stats.p50:.2f};p99={stats.p99:.2f}"))
+def fig9_workloads(scale="default", sequential=False) -> List[Row]:
+    """Workload generality: the 3-workload x 3-policy grid is one trace
+    (workloads only change flow-table contents)."""
+    specs = [ExpSpec(topology="testbed8", workload=wl, load=0.3, policy=pol,
+                     duration_us=_DUR[scale])
+             for wl in ["websearch", "fbhdp", "alistorage"]
+             for pol in ["ecmp", "ucmp", "lcmp"]]
+    results, per_cell, summary = _sweep("fig9", specs, sequential)
+    rows, csv = [summary], []
+    for res in results:
+        s, st = res.spec, res.stats
+        csv.append(f"{s.workload},{s.policy},{st.p50:.3f},{st.p99:.3f}")
+        rows.append((f"fig9/{s.workload}/{s.policy}", per_cell,
+                     f"p50={st.p50:.2f};p99={st.p99:.2f}"))
     _csv("fig9_workloads.csv", "workload,policy,p50,p99", csv)
     return rows
 
 
 # ----------------------------------------------------------------- Figure 10
-def fig10_cc_orthogonality(scale="default") -> List[Row]:
-    rows, csv = [], []
-    for cc in ["dcqcn", "hpcc", "timely", "dctcp"]:
-        for pol in ["ecmp", "ucmp", "lcmp"]:
-            spec = ExpSpec(topology="testbed8", load=0.3, policy=pol, cc=cc,
-                           duration_us=_DUR[scale])
-            stats, _, _, us = _run(spec)
-            csv.append(f"{cc},{pol},{stats.p50:.3f},{stats.p99:.3f}")
-            rows.append((f"fig10/{cc}/{pol}", us,
-                         f"p50={stats.p50:.2f};p99={stats.p99:.2f}"))
+def fig10_cc_orthogonality(scale="default", sequential=False) -> List[Row]:
+    """CC orthogonality: cc is a static (trace-level) axis, so this grid
+    compiles once per CC law and vmaps the policy axis inside each."""
+    specs = [ExpSpec(topology="testbed8", load=0.3, policy=pol, cc=cc,
+                     duration_us=_DUR[scale])
+             for cc in ["dcqcn", "hpcc", "timely", "dctcp"]
+             for pol in ["ecmp", "ucmp", "lcmp"]]
+    results, per_cell, summary = _sweep("fig10", specs, sequential)
+    rows, csv = [summary], []
+    for res in results:
+        s, st = res.spec, res.stats
+        csv.append(f"{s.cc},{s.policy},{st.p50:.3f},{st.p99:.3f}")
+        rows.append((f"fig10/{s.cc}/{s.policy}", per_cell,
+                     f"p50={st.p50:.2f};p99={st.p99:.2f}"))
     _csv("fig10_cc.csv", "cc,policy,p50,p99", csv)
     return rows
 
 
 # ----------------------------------------------------------------- Figure 11
-def fig11_ablations(scale="default") -> List[Row]:
+def fig11_ablations(scale="default", sequential=False) -> List[Row]:
     """(a) rm-alpha/rm-beta; (b) global (alpha,beta); (c) (w_dl,w_lc);
-    (d) (w_ql,w_tl,w_dp) — per-size-bucket p50/p99 on the testbed @30%."""
-    rows = []
+    (d) (w_ql,w_tl,w_dp) — per-size-bucket p50/p99 on the testbed @30%.
+
+    Parameter dataclasses are static (baked into the trace), so each
+    variant is its own sweep group — the engine handles the degenerate
+    1-cell-per-group grid transparently."""
     variants = {
         # (a) component ablation
         "full": {},
@@ -186,37 +215,65 @@ def fig11_ablations(scale="default") -> List[Row]:
         "cg-1-2-1": dict(congp=CongParams(w_ql=1, w_tl=2, w_dp=1)),
         "cg-1-1-2": dict(congp=CongParams(w_ql=1, w_tl=1, w_dp=2)),
     }
-    csv = []
-    for name, over in variants.items():
-        spec = ExpSpec(topology="testbed8", load=0.3, policy="lcmp",
-                       duration_us=_DUR[scale], **over)
-        stats, _, _, us = _run(spec)
-        buckets = stats.by_size_bucket(_SIZE_EDGES)
-        for b, v in buckets.items():
+    specs = [ExpSpec(topology="testbed8", load=0.3, policy="lcmp",
+                     duration_us=_DUR[scale], **over)
+             for over in variants.values()]
+    results, per_cell, summary = _sweep("fig11", specs, sequential)
+    rows, csv = [summary], []
+    for name, res in zip(variants, results):
+        st = res.stats
+        for b, v in st.by_size_bucket(_SIZE_EDGES).items():
             csv.append(f"{name},{b},{v['p50']:.3f},{v['p99']:.3f},{v['n']}")
-        rows.append((f"fig11/{name}", us,
-                     f"p50={stats.p50:.2f};p99={stats.p99:.2f}"))
+        rows.append((f"fig11/{name}", per_cell,
+                     f"p50={st.p50:.2f};p99={st.p99:.2f}"))
     _csv("fig11_ablations.csv", "variant,size_bucket,p50,p99,n", csv)
     return rows
 
 
 # --------------------------------------------------- failover (claim §3.4)
-def failover_bench(scale="default") -> List[Row]:
-    """Data-plane fast-failover: completion rate + tail with a 100G link
-    killed mid-run (lazy re-hash, zero control-plane involvement)."""
-    rows = []
-    for pol in ["lcmp", "ecmp"]:
-        spec = ExpSpec(topology="testbed8", load=0.3, policy=pol,
-                       duration_us=_DUR[scale])
-        t, table, flows, cfg = build_experiment(spec)
-        cfg = dataclasses.replace(cfg, fail_link=12,
-                                  fail_at_us=_DUR[scale] // 3)
-        arrs, st = fluid.build(table, flows, cfg)
-        t0 = time.perf_counter()
-        final = fluid.run(arrs, st, cfg)
-        us = (time.perf_counter() - t0) * 1e6
-        stats = metrics.fct_stats(final, table, flows, cfg)
-        rows.append((f"failover/{pol}", us,
-                     f"completed={stats.completed}/{stats.offered};"
-                     f"p99={stats.p99:.2f}"))
+def failover_bench(scale="default", sequential=False) -> List[Row]:
+    """Data-plane fast-failover: completion rate + tail with the 100G/5ms
+    long-haul link killed a third into the run (lazy re-hash, zero
+    control-plane involvement). Runs via the ``testbed8_failover``
+    scenario — both policies share the schedule, so the pair is one
+    sweep group."""
+    fail_ms = _DUR[scale] // 3000
+    specs = [ExpSpec(topology=f"testbed8_failover:fail_ms={fail_ms}",
+                     load=0.3, policy=pol, duration_us=_DUR[scale])
+             for pol in ["lcmp", "ecmp"]]
+    results, per_cell, summary = _sweep("failover", specs, sequential)
+    rows = [summary]
+    for res in results:
+        st = res.stats
+        rows.append((f"failover/{res.spec.policy}", per_cell,
+                     f"completed={st.completed}/{st.offered};"
+                     f"p99={st.p99:.2f}"))
+    return rows
+
+
+# ------------------------------------------------- scenario showcase (new)
+def scenarios_bench(scale="default", sequential=False) -> List[Row]:
+    """Beyond-paper scenario regimes from the registry: a segmented
+    long-haul mesh (MatchRDMA-style), silent capacity degradation on the
+    13-DC backbone, and delay-asymmetry jitter on the testbed."""
+    specs = [ExpSpec(topology=top, load=0.3, policy=pol,
+                     duration_us=_DUR[scale], pairs=pairs,
+                     cap_scale=cap_scale)
+             for top, pairs, cap_scale in [
+                 ("longhaul_mesh:routes=6,segs=3", "main", 0.125),
+                 (f"bso13_degrade:at_ms={_DUR[scale] // 3000}", "all", 0.0625),
+                 ("jitter:base=testbed8,frac=0.3", "main", 0.125),
+             ]
+             for pol in ["lcmp", "ecmp"]]
+    results, per_cell, summary = _sweep("scenarios", specs, sequential)
+    rows, csv = [summary], []
+    for res in results:
+        s, st = res.spec, res.stats
+        name = s.topology.split(":")[0]
+        csv.append(f"{name},{s.policy},{st.p50:.3f},{st.p99:.3f},"
+                   f"{st.completed}")
+        rows.append((f"scenarios/{name}/{s.policy}", per_cell,
+                     f"p50={st.p50:.2f};p99={st.p99:.2f};"
+                     f"completed={st.completed}/{st.offered}"))
+    _csv("scenarios.csv", "scenario,policy,p50,p99,completed", csv)
     return rows

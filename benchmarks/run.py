@@ -5,6 +5,7 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run              # default scale
     PYTHONPATH=src python -m benchmarks.run --scale quick
     PYTHONPATH=src python -m benchmarks.run --only fig5,kernels
+    PYTHONPATH=src python -m benchmarks.run --sequential # pre-sweep loop
 """
 from __future__ import annotations
 
@@ -18,24 +19,33 @@ def main() -> None:
     ap.add_argument("--scale", default="default",
                     choices=["quick", "default", "full"])
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: fig1,fig5,fig6,fig7_8,"
-                         "fig9,fig10,fig11,failover,kernels")
+                    help="comma-separated subset of suites (see error "
+                         "message or source for the list)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="run figure grids cell-by-cell (the pre-sweep "
+                         "baseline) instead of the batched sweep engine")
     args = ap.parse_args()
 
     from benchmarks import figures, kernel_bench
 
+    scale, seq = args.scale, args.sequential
     suites = {
-        "fig1": lambda: figures.fig1_link_utilization(args.scale),
-        "fig5": lambda: figures.fig5_testbed_fct(args.scale),
-        "fig6": lambda: figures.fig6_fidelity(args.scale),
-        "fig7_8": lambda: figures.fig7_8_large_scale(args.scale),
-        "fig9": lambda: figures.fig9_workloads(args.scale),
-        "fig10": lambda: figures.fig10_cc_orthogonality(args.scale),
-        "fig11": lambda: figures.fig11_ablations(args.scale),
-        "failover": lambda: figures.failover_bench(args.scale),
+        "fig1": lambda: figures.fig1_link_utilization(scale, seq),
+        "fig5": lambda: figures.fig5_testbed_fct(scale, seq),
+        "fig6": lambda: figures.fig6_fidelity(scale, seq),
+        "fig7_8": lambda: figures.fig7_8_large_scale(scale, seq),
+        "fig9": lambda: figures.fig9_workloads(scale, seq),
+        "fig10": lambda: figures.fig10_cc_orthogonality(scale, seq),
+        "fig11": lambda: figures.fig11_ablations(scale, seq),
+        "failover": lambda: figures.failover_bench(scale, seq),
+        "scenarios": lambda: figures.scenarios_bench(scale, seq),
         "kernels": kernel_bench.all_benches,
     }
     wanted = [s for s in args.only.split(",") if s] or list(suites)
+    unknown = sorted(set(wanted) - set(suites))
+    if unknown:
+        sys.exit(f"error: unknown suite(s): {', '.join(unknown)}\n"
+                 f"valid suites: {', '.join(suites)}")
 
     print("name,us_per_call,derived")
     ok = True

@@ -1,6 +1,8 @@
 """Reproduce the paper's core result interactively: LCMP vs ECMP vs UCMP
 on the 8-DC heterogeneous testbed (Fig. 5 direction) + the herd-effect
-demo on a burst of simultaneous flows (paper challenge C3).
+demo on a burst of simultaneous flows (paper challenge C3), now driven
+through the batched sweep engine — the whole policy comparison is ONE
+XLA computation — plus a beyond-paper scenario sweep from the registry.
 
   PYTHONPATH=src python examples/routing_sim.py
 """
@@ -8,15 +10,31 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import select
-from repro.netsim.experiment import ExpSpec, run_experiment
+from repro.netsim.experiment import ExpSpec
+from repro.netsim.sweep import run_sweep
 
 print("=== FCT slowdown on the 8-DC testbed, WebSearch @30% load ===")
-for pol in ["ecmp", "ucmp", "lcmp", "lcmp_w"]:
-    spec = ExpSpec(topology="testbed8", load=0.3, policy=pol,
-                   duration_us=400_000)
-    stats, util, _ = run_experiment(spec)
-    print(f"  {pol:7s} p50={stats.p50:6.2f}  p99={stats.p99:7.2f}  "
-          f"(completed {stats.completed})")
+specs = [ExpSpec(topology="testbed8", load=0.3, policy=pol,
+                 duration_us=400_000)
+         for pol in ["ecmp", "ucmp", "lcmp", "lcmp_w"]]
+report = run_sweep(specs)   # 4 cells, one trace, one dispatch
+for cell in report:
+    st = cell.stats
+    print(f"  {cell.spec.policy:7s} p50={st.p50:6.2f}  p99={st.p99:7.2f}  "
+          f"(completed {st.completed})")
+print(f"  [{report.num_cells} cells in {report.num_groups} compiled "
+      f"group(s), {report.wall_s:.1f}s]")
+
+print("\n=== Scenario registry: segmented long-haul mesh + failover ===")
+specs = [ExpSpec(topology=top, load=0.3, policy=pol, duration_us=300_000)
+         for top in ["longhaul_mesh:routes=6,segs=3",
+                     "testbed8_failover:fail_ms=100"]
+         for pol in ["lcmp", "ecmp"]]
+for cell in run_sweep(specs):
+    st = cell.stats
+    name = cell.spec.topology.split(":")[0]
+    print(f"  {name:18s} {cell.spec.policy:5s} p50={st.p50:6.2f} "
+          f"p99={st.p99:7.2f}  completed {st.completed}/{st.offered}")
 
 print("\n=== Herd mitigation: 1000 flows decide simultaneously ===")
 fids = jnp.arange(1000, dtype=jnp.uint32) * jnp.uint32(2654435761)

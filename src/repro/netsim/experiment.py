@@ -1,15 +1,22 @@
-"""One-call experiment driver: topology + workload + policy -> FCT stats.
+"""One-call experiment driver: scenario + workload + policy -> FCT stats.
 
 This is the unit the benchmark harness (one per paper figure) composes.
+``ExpSpec.topology`` accepts any registered scenario string (see
+``repro.netsim.scenarios``), including parameterized ones like
+``"longhaul_mesh:routes=8,segs=3"``. The helpers are factored so the
+batched sweep engine (``repro.netsim.sweep``) can share the cached
+world-building and flow-generation steps while replacing the one-cell
+``fluid.run`` with a single vmapped invocation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import functools
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.netsim import fluid, metrics, paths, topo
+from repro.netsim import fluid, metrics, paths, scenarios
 from repro.netsim.fluid import SimConfig
 from repro.traffic import cdf as cdfmod
 from repro.traffic.gen import generate
@@ -17,46 +24,56 @@ from repro.traffic.gen import generate
 
 @dataclasses.dataclass(frozen=True)
 class ExpSpec:
-    topology: str = "testbed8"       # testbed8 | bso13 | parallel
+    topology: str = "testbed8"       # any scenario string (scenarios.names())
     workload: str = "websearch"
     load: float = 0.3
     policy: str = "lcmp"
     cc: str = "dcqcn"
     duration_us: int = 1_500_000
     seed: int = 0
-    pairs: str = "dc1dc8"            # dc1dc8 | all | <src>-<dst>
+    pairs: str = "main"              # main | all | <src>-<dst>
     cap_scale: float = 0.125
     select: Optional[object] = None  # optional SelectParams override
     pathq: Optional[object] = None   # optional PathQParams override
     congp: Optional[object] = None   # optional CongParams override
 
 
-_TOPOS = {
-    "testbed8": topo.testbed_8dc,
-    "bso13": topo.bso_13dc,
-}
-
-
-def build_experiment(spec: ExpSpec):
-    t = _TOPOS[spec.topology]()
+@functools.lru_cache(maxsize=32)
+def build_world(topology: str):
+    """Scenario + path table for a scenario string (cached: sweeps hit the
+    same world for every cell of a figure grid, and the DFS path
+    enumeration on the 13-DC mesh is the expensive numpy part)."""
+    scen = scenarios.get(topology)
+    t = scen.topology
     pair_list = paths.all_pairs(t)
     table = paths.build_path_table(t, pair_list)
     fluid.attach_link_caps(table, t)
+    return scen, table
+
+
+def traffic_pair_ids(spec: ExpSpec, scen: scenarios.Scenario, table) -> list:
     pidx = table.pair_index()
+    if spec.pairs in ("main", "dc1dc8"):     # dc1dc8: legacy spelling
+        main = pidx[scen.main_pair]
+        if table.pair_ncand[main] == 0:
+            raise ValueError(
+                f"scenario {spec.topology!r}: main pair {scen.main_pair} has "
+                "no installed candidate paths (parameters out of range?)")
+        return [main]
+    if spec.pairs == "all":
+        return [pidx[p] for p in pidx if table.pair_ncand[pidx[p]] > 0]
+    s, d = spec.pairs.split("-")
+    return [pidx[(int(s), int(d))]]
 
-    if spec.pairs == "dc1dc8":
-        traffic_pairs = [pidx[(0, 7)]]
-    elif spec.pairs == "all":
-        traffic_pairs = [pidx[p] for p in pair_list
-                         if table.pair_ncand[pidx[p]] > 0]
-    else:
-        s, d = spec.pairs.split("-")
-        traffic_pairs = [pidx[(int(s), int(d))]]
 
-    flows = generate(table, cdfmod.WORKLOADS[spec.workload], spec.load,
-                     spec.duration_us, pair_ids=traffic_pairs, seed=spec.seed,
-                     cap_scale=spec.cap_scale)
+def make_flows(spec: ExpSpec, scen: scenarios.Scenario, table):
+    return generate(table, cdfmod.WORKLOADS[spec.workload], spec.load,
+                    spec.duration_us,
+                    pair_ids=traffic_pair_ids(spec, scen, table),
+                    seed=spec.seed, cap_scale=spec.cap_scale)
 
+
+def spec_to_cfg(spec: ExpSpec, scen: scenarios.Scenario) -> SimConfig:
     kw = {}
     if spec.select is not None:
         kw["select"] = spec.select
@@ -64,10 +81,17 @@ def build_experiment(spec: ExpSpec):
         kw["pathq"] = spec.pathq
     if spec.congp is not None:
         kw["congp"] = spec.congp
-    cfg = SimConfig(policy=spec.policy, cc=spec.cc,
-                    horizon_us=spec.duration_us * 2,   # let tail flows finish
-                    cap_scale=spec.cap_scale, **kw)
-    return t, table, flows, cfg
+    return SimConfig(policy=spec.policy, cc=spec.cc,
+                     horizon_us=spec.duration_us * 2,  # let tail flows finish
+                     cap_scale=spec.cap_scale,
+                     fail_sched=scen.fail_sched,
+                     degrade_sched=scen.degrade_sched, **kw)
+
+
+def build_experiment(spec: ExpSpec):
+    scen, table = build_world(spec.topology)
+    flows = make_flows(spec, scen, table)
+    return scen.topology, table, flows, spec_to_cfg(spec, scen)
 
 
 def run_experiment(spec: ExpSpec):

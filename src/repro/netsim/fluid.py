@@ -47,10 +47,23 @@ from repro.traffic.gen import FlowSet
 
 HIST = 8192          # congestion-history ring (steps); must exceed max RTT
 
+# Policy name -> dense code. "sweep" is a meta-policy: the step function
+# dispatches on the per-experiment ``SimArrays.policy_code`` scalar instead
+# of a Python branch, so a vmapped batch can mix policies in one trace
+# (the sweep engine's whole-grid-single-XLA-computation mode).
+POLICIES = ("lcmp", "lcmp_w", "ecmp", "ucmp", "wcmp", "redte")
+_NEVER = (1 << 30)   # sentinel step for "this link never fails/degrades"
+
+
+def policy_code(policy: str) -> int:
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; valid: {POLICIES}")
+    return POLICIES.index(policy)
+
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    policy: str = "lcmp"          # lcmp|ecmp|ucmp|wcmp|redte
+    policy: str = "lcmp"          # lcmp|ecmp|ucmp|wcmp|redte|sweep
     cc: str = "dcqcn"             # dcqcn|dctcp|timely|hpcc
     dt_us: int = 200
     horizon_us: int = 2_000_000
@@ -67,13 +80,31 @@ class SimConfig:
     select: SelectParams = SelectParams()
     pathq: PathQParams = PathQParams()
     congp: CongParams = CongParams()
-    # optional single-link failure injection
+    # optional single-link failure injection (legacy single-event form;
+    # folded into the schedule arrays at build time)
     fail_link: int = -1
     fail_at_us: int = -1
+    # scenario schedules (hashable static tuples, see netsim.scenarios):
+    # fail_sched    = ((link_idx, at_us), ...)          hard link trips
+    # degrade_sched = ((link_idx, at_us, factor), ...)  silent capacity loss
+    fail_sched: tuple = ()
+    degrade_sched: tuple = ()
+    # policy=="sweep" only: the policies the dynamic dispatch must cover.
+    # The sweep engine narrows this to the ones actually present in a
+    # batch so un-swept policies cost nothing per step.
+    sweep_policies: tuple = POLICIES
 
     @property
     def num_steps(self) -> int:
         return self.horizon_us // self.dt_us
+
+    @property
+    def has_failures(self) -> bool:
+        return self.fail_link >= 0 or len(self.fail_sched) > 0
+
+    @property
+    def has_degrade(self) -> bool:
+        return len(self.degrade_sched) > 0
 
 
 @jax.tree_util.register_dataclass
@@ -123,7 +154,12 @@ class SimArrays:
     f_size: jnp.ndarray        # (F,) f32
     f_pair: jnp.ndarray        # (F,) i32
     f_id: jnp.ndarray          # (F,) u32
-    tables: object             # SwitchTables
+    # () i32 — read only when cfg.policy=="sweep"
+    policy_code: jnp.ndarray = None
+    link_fail_step: jnp.ndarray = None    # (L,) i32 trip step (_NEVER)
+    link_deg_step: jnp.ndarray = None     # (L,) i32 degradation onset step
+    link_deg_factor: jnp.ndarray = None   # (L,) f32 cap multiplier after onset
+    tables: object = None      # SwitchTables
 
 
 def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
@@ -156,6 +192,19 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
         arrivals[s, slot[s]] = i
         slot[s] += 1
 
+    # failure / degradation schedules -> per-link step arrays (the legacy
+    # single-event fields fold into the same representation)
+    fail_step = np.full(L, _NEVER, np.int32)
+    if cfg.fail_link >= 0:
+        fail_step[cfg.fail_link] = cfg.fail_at_us // cfg.dt_us
+    for li, at_us in cfg.fail_sched:
+        fail_step[li] = min(int(fail_step[li]), int(at_us) // cfg.dt_us)
+    deg_step = np.full(L, _NEVER, np.int32)
+    deg_factor = np.ones(L, np.float32)
+    for li, at_us, fac in cfg.degrade_sched:
+        deg_step[li] = int(at_us) // cfg.dt_us
+        deg_factor[li] = float(fac)
+
     arr = SimArrays(
         link_cap=link_cap,
         link_cap_gbps=jnp.asarray(link_cap_gbps, jnp.int32),
@@ -171,6 +220,11 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
         f_size=jnp.asarray(flows.size_bytes, jnp.float32),
         f_pair=jnp.asarray(flows.pair_id),
         f_id=jnp.asarray(flows.flow_id),
+        policy_code=jnp.int32(policy_code(cfg.policy)
+                              if cfg.policy != "sweep" else 0),
+        link_fail_step=jnp.asarray(fail_step),
+        link_deg_step=jnp.asarray(deg_step),
+        link_deg_factor=jnp.asarray(deg_factor),
         tables=tb,
     )
     F = flows.num_flows
@@ -240,22 +294,34 @@ def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
     delay = ar.path_prop[cpad]
     capg = ar.path_cap_gbps[cpad]
 
-    if cfg.policy == "lcmp":
-        k_idx, _ = selmod.select_egress(fid, c_path, c_cong, valid, cfg.select)
-    elif cfg.policy == "lcmp_w":   # beyond-paper: capacity-weighted stage 2
-        k_idx, _ = selmod.select_egress(fid, c_path, c_cong, valid, cfg.select,
-                                        weights=capg)
-    elif cfg.policy == "ecmp":
-        k_idx = bl.ecmp(fid, delay, capg, valid)
-    elif cfg.policy == "ucmp":
-        k_idx = bl.ucmp(fid, delay, capg, valid)
-    elif cfg.policy == "wcmp":
-        k_idx = bl.wcmp(fid, delay, capg, valid)
-    elif cfg.policy == "redte":
-        w = st.redte_w[pair]
-        k_idx = bl._weighted_hash(fid, w, valid)
+    def _choice(policy: str) -> jnp.ndarray:
+        if policy == "lcmp":
+            return selmod.select_egress(fid, c_path, c_cong, valid,
+                                        cfg.select)[0]
+        if policy == "lcmp_w":  # beyond-paper: capacity-weighted stage 2
+            return selmod.select_egress(fid, c_path, c_cong, valid,
+                                        cfg.select, weights=capg)[0]
+        if policy == "ecmp":
+            return bl.ecmp(fid, delay, capg, valid)
+        if policy == "ucmp":
+            return bl.ucmp(fid, delay, capg, valid)
+        if policy == "wcmp":
+            return bl.wcmp(fid, delay, capg, valid)
+        if policy == "redte":
+            return bl._weighted_hash(fid, st.redte_w[pair], valid)
+        raise ValueError(policy)
+
+    if cfg.policy == "sweep":
+        # dynamic dispatch on the per-experiment code: every *swept*
+        # policy's decision is computed (m<=8 candidates — cheap relative
+        # to the per-flow state updates) and the cell's one is gathered,
+        # so a vmapped batch can mix policies inside a single trace.
+        codes = jnp.asarray([policy_code(p) for p in cfg.sweep_policies],
+                            jnp.int32)
+        k_all = jnp.stack([_choice(p) for p in cfg.sweep_policies])
+        k_idx = jnp.take(k_all, jnp.argmax(codes == ar.policy_code), axis=0)
     else:
-        raise ValueError(cfg.policy)
+        k_idx = _choice(cfg.policy)
 
     chosen = jnp.take_along_axis(cand, jnp.maximum(k_idx, 0)[:, None],
                                  axis=1)[:, 0]
@@ -271,8 +337,14 @@ def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
 
     rtt = jnp.maximum(2 * ar.path_prop[cpath_sel] // cfg.dt_us, 1)
 
+    F = st.flow_path.shape[0]
+
     def upd(a, vals, where_ok):
-        return a.at[fidx].set(jnp.where(where_ok, vals, a[fidx]))
+        # pad slots / no-decision flows scatter out of bounds and drop:
+        # writing a[fidx=0] for pads would race a real flow-0 arrival in
+        # the same batch and make results depend on the pad width (which
+        # the sweep engine varies when stacking cells).
+        return a.at[jnp.where(where_ok, fidx, F)].set(vals, mode="drop")
 
     st = dataclasses.replace(
         st,
@@ -395,16 +467,15 @@ def make_step(ar: SimArrays, cfg: SimConfig):
     dt = float(cfg.dt_us)
 
     def step(st: SimState, t):
-        # 0) failure injection + lazy fast-failover (paper §3.4): at the
-        # trip step, flows pinned to the dead path are treated as "first
-        # packets" again and re-hashed onto live candidates.
-        if cfg.fail_link >= 0:
-            trip_step = cfg.fail_at_us // cfg.dt_us
-            is_trip = t == trip_step
-            st = dataclasses.replace(
-                st, link_alive=st.link_alive.at[cfg.fail_link].set(
-                    jnp.where(t >= trip_step, False,
-                              st.link_alive[cfg.fail_link])))
+        # 0) failure injection + lazy fast-failover (paper §3.4): at a
+        # trip step, flows pinned to a dead path are treated as "first
+        # packets" again and re-hashed onto live candidates. The schedule
+        # lives in (L,) arrays shared across sweep cells, so the trip
+        # predicate stays unbatched under vmap and the reroute cond is a
+        # real branch (paid only at trip steps), not a select.
+        if cfg.has_failures:
+            st = dataclasses.replace(st, link_alive=t < ar.link_fail_step)
+            is_trip = (ar.link_fail_step == t).any()
             st = jax.lax.cond(is_trip,
                               lambda s: _reroute_dead(t, s, ar, cfg),
                               lambda s: s, st)
@@ -428,8 +499,15 @@ def make_step(ar: SimArrays, cfg: SimConfig):
         offered = jax.ops.segment_sum(contrib.reshape(-1), lidx.reshape(-1),
                                       num_segments=L)           # (L,) B/us
 
-        # 4) per-link share factor and queue integration
-        cap = jnp.where(st.link_alive, ar.link_cap, 1e-9)
+        # 4) per-link share factor and queue integration. Degradation is
+        # *silent* (an OTN segment loses capacity but stays up): flows stay
+        # pinned and only CC + the switch's congestion registers react —
+        # the scenario the paper's cost model is meant to absorb.
+        cap_nom = ar.link_cap
+        if cfg.has_degrade:
+            cap_nom = cap_nom * jnp.where(t >= ar.link_deg_step,
+                                          ar.link_deg_factor, 1.0)
+        cap = jnp.where(st.link_alive, cap_nom, 1e-9)
         factor_l = jnp.minimum(1.0, cap / jnp.maximum(offered, 1e-9))
         served = jnp.minimum(offered, cap)
         q = jnp.clip(st.q_bytes + (offered - cap) * dt, 0.0,
@@ -464,8 +542,11 @@ def make_step(ar: SimArrays, cfg: SimConfig):
             done=st.done | newly_done,
             fct_us=jnp.where(newly_done, fct, st.fct_us))
 
-        # 7) RedTE periodic split-ratio re-optimization (100 ms loop)
-        if cfg.policy == "redte":
+        # 7) RedTE periodic split-ratio re-optimization (100 ms loop).
+        # In sweep mode the weights are maintained unconditionally (cheap
+        # (NPAIR,K) integer ops) — only redte-coded cells ever read them.
+        if cfg.policy == "redte" or (cfg.policy == "sweep"
+                                     and "redte" in cfg.sweep_policies):
             period = max(cfg.redte_period_us // cfg.dt_us, 1)
             due = (t % period) == 0
             util_q8 = jnp.clip(st.u_ewma * 256, 0, 255).astype(jnp.int32)
@@ -496,12 +577,18 @@ def _reroute_dead(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> SimState:
     valid = (cand >= 0) & h_alive
     c_path = ar.c_path[cpad]
     c_cong = st.c_cong[ar.path_first[cpad]]
+    lcmp_k = lambda: selmod.select_egress(ar.f_id, c_path, c_cong, valid,
+                                          cfg.select)[0]
+    ecmp_k = lambda: bl.ecmp(ar.f_id, ar.path_prop[cpad],
+                             ar.path_cap_gbps[cpad], valid)
     if cfg.policy == "lcmp":
-        k_idx, _ = selmod.select_egress(ar.f_id, c_path, c_cong, valid,
-                                        cfg.select)
+        k_idx = lcmp_k()
+    elif cfg.policy == "sweep" and "lcmp" in cfg.sweep_policies:
+        # same semantics per cell: lcmp re-decides, baselines re-hash
+        k_idx = jnp.where(ar.policy_code == POLICIES.index("lcmp"),
+                          lcmp_k(), ecmp_k())
     else:  # baselines re-hash uniformly on failure
-        k_idx = bl.ecmp(ar.f_id, ar.path_prop[cpad],
-                        ar.path_cap_gbps[cpad], valid)
+        k_idx = ecmp_k()
     new_path = jnp.take_along_axis(cand, jnp.maximum(k_idx, 0)[:, None],
                                    axis=1)[:, 0]
     ok = move & (k_idx >= 0)
@@ -516,9 +603,14 @@ def _reroute_dead(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> SimState:
         active=jnp.where(move & (k_idx < 0), False, st.active))
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def run(arrs: SimArrays, state: SimState, cfg: SimConfig) -> SimState:
-    """Execute the full horizon; returns final state (fct_us, done, ...)."""
+def run_impl(arrs: SimArrays, state: SimState, cfg: SimConfig) -> SimState:
+    """Unjitted scan body — the sweep engine vmaps/shard_maps this and
+    wraps its own single jit around the whole batch."""
     step = make_step(arrs, cfg)
     final, _ = jax.lax.scan(step, state, jnp.arange(cfg.num_steps))
     return final
+
+
+# jitted entry point for single experiments (the sweep engine jits its
+# own vmap of run_impl instead, one trace per cell group)
+run = jax.jit(run_impl, static_argnames=("cfg",))

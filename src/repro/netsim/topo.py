@@ -108,6 +108,50 @@ def duplex_line(num_nodes: int = 3, cap: int = 100, delay_us: int = 5000) -> Top
     return Topology("line", num_nodes, _bidir(edges))
 
 
+def segmented_parallel(route_caps, route_delays_us, segs: int = 2,
+                       tail_cap: int = 400, tail_delay_us: int = 1000) -> Topology:
+    """Parallel long-haul routes where each route's long haul is a chain of
+    ``segs`` OTN segments in series (MatchRDMA-style segmented links: a
+    2000 km haul is really several amplified/regenerated spans, and a
+    single span can fail or degrade independently).
+
+    Node layout: 0 = src DC, then ``segs`` transit nodes per route, then
+    dst = 1 + len(routes)*segs. Route i gets capacity ``route_caps[i]`` on
+    every segment and its one-way delay ``route_delays_us[i]`` split evenly
+    across segments, followed by a fat tail hop into the destination (the
+    same "long haul defines the path" construction as the 8-DC testbed).
+
+    With the default ``MAX_HOPS=5`` path enumeration, ``segs`` must stay
+    <= 4 (segs long-haul hops + 1 tail hop per route).
+    """
+    n = len(route_caps)
+    assert len(route_delays_us) == n
+    if not 1 <= segs <= 4:   # paths.MAX_HOPS=5 minus the tail hop
+        raise ValueError(f"segs={segs} unroutable: paths are segs+1 hops "
+                         "and candidate enumeration caps at 5 (paths.MAX_HOPS)")
+    dst = 1 + n * segs
+    edges: List[Link] = []
+    for i, (cap, delay) in enumerate(zip(route_caps, route_delays_us)):
+        seg_delay = max(int(delay) // segs, 1)
+        nodes = [0] + [1 + i * segs + j for j in range(segs)]
+        for a, b in zip(nodes[:-1], nodes[1:]):
+            edges.append((a, b, int(cap), seg_delay))
+        edges.append((nodes[-1], dst, tail_cap, tail_delay_us))
+    return Topology(f"segmented-parallel-{n}x{segs}", dst + 1, _bidir(edges))
+
+
+def delay_jitter(base: Topology, frac: float = 0.2, seed: int = 0) -> Topology:
+    """Apply asymmetric delay jitter: every *directed* link's propagation
+    delay is independently scaled by U[1-frac, 1+frac], so forward and
+    reverse directions of the same fiber diverge — the delay-asymmetry
+    regime long-haul RTT estimators (and the paper's delayScore) must
+    tolerate."""
+    rng = np.random.default_rng(seed)
+    links = [(s, d, c, max(int(round(dl * (1.0 + frac * (2.0 * rng.random() - 1.0)))), 1))
+             for (s, d, c, dl) in base.links]
+    return Topology(f"{base.name}-jitter{frac}s{seed}", base.num_nodes, links)
+
+
 def parallel_paths(caps=(100, 100), delays_us=(5000, 5000)) -> Topology:
     """src=0, dst=N+1, one transit node per parallel path — the minimal
     multi-path fixture for routing tests."""

@@ -1,0 +1,96 @@
+"""Scenario-registry contracts: every named scenario builds a valid
+multi-candidate world, parameter strings parse, and the CLI rejects
+unknown names with a helpful message (no raw KeyError)."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.netsim import paths, scenarios, topo
+
+
+@pytest.mark.parametrize("name", scenarios.names())
+def test_registry_builds_valid_path_tables(name):
+    """Default-parameter build of every scenario yields a topology whose
+    main pair has multiple first-hop-distinct candidates (except the
+    deliberately single-path cases) and a structurally valid table."""
+    scen = scenarios.get(name)
+    t = scen.topology
+    table = paths.build_path_table(t, paths.all_pairs(t))
+    pidx = table.pair_index()
+    main = pidx[scen.main_pair]
+    assert table.pair_ncand[main] >= 2, (name, scen.main_pair)
+    cands = table.pair_cand[main][: table.pair_ncand[main]]
+    firsts = table.path_first[cands]
+    assert len(set(firsts.tolist())) == len(cands)   # first-hop distinct
+    # per-path attributes consistent with the link arrays
+    _, _, cap_a, del_a = t.arrays()
+    for p in cands:
+        hops = table.path_links[p][table.path_links[p] >= 0]
+        assert table.path_prop_us[p] == del_a[hops].sum()
+        assert table.path_cap[p] == cap_a[hops].min()
+    # schedules reference real links
+    for li, _ in scen.fail_sched:
+        assert 0 <= li < t.num_links
+    for li, _, fac in scen.degrade_sched:
+        assert 0 <= li < t.num_links and 0.0 < fac <= 1.0
+
+
+def test_param_parsing():
+    name, params = scenarios.parse("longhaul_mesh:routes=8,segs=3,caps=200+40,lo_ms=5")
+    assert name == "longhaul_mesh"
+    assert params == {"routes": 8, "segs": 3, "caps": (200, 40), "lo_ms": 5}
+    scen = scenarios.get("longhaul_mesh:routes=8,segs=3,caps=200+40")
+    assert scen.topology.num_nodes == 2 + 8 * 3
+    # 8 first-hop-distinct candidate routes survive enumeration
+    table = paths.build_path_table(scen.topology, [scen.main_pair])
+    assert table.pair_ncand[0] == 8
+
+
+def test_unknown_scenario_and_bad_params_raise_helpfully():
+    with pytest.raises(ValueError, match="available:"):
+        scenarios.get("nope")
+    with pytest.raises(ValueError, match="bad scenario parameter"):
+        scenarios.get("parallel:n")
+    with pytest.raises(ValueError, match="bad parameters"):
+        scenarios.get("parallel:bogus_key=3")
+
+
+def test_jitter_is_asymmetric_and_schedule_preserving():
+    scen = scenarios.get("jitter:base=testbed8,frac=0.3,seed=7")
+    base = topo.testbed_8dc()
+    fwd = {(s, d): dl for s, d, _, dl in scen.topology.links}
+    diffs = [abs(fwd[(s, d)] - fwd[(d, s)]) for s, d, _, _ in base.links]
+    assert max(diffs) > 0                       # directions diverge
+    caps = {(s, d): c for s, d, c, _ in scen.topology.links}
+    assert all(caps[(s, d)] == c for s, d, c, _ in base.links)  # caps intact
+    # deterministic under the seed
+    again = scenarios.get("jitter:base=testbed8,frac=0.3,seed=7")
+    assert again.topology.links == scen.topology.links
+    # failover base keeps its schedule through the jitter wrapper
+    wrapped = scenarios.get("jitter:base=testbed8_failover,frac=0.1")
+    assert wrapped.fail_sched == scenarios.get("testbed8_failover").fail_sched
+
+
+def test_segmented_parallel_structure():
+    t = topo.segmented_parallel([100, 40], [10_000, 250_000], segs=3)
+    # 2 routes x (3 segments + 1 tail hop), bidirectional
+    assert t.num_links == 2 * 2 * 4
+    assert t.num_nodes == 2 + 2 * 3
+    table = paths.build_path_table(t, [(0, t.num_nodes - 1)])
+    assert table.pair_ncand[0] == 2
+    assert sorted(table.path_cap[:2].tolist()) == [40, 100]
+
+
+def test_benchmark_cli_rejects_unknown_suite():
+    """Satellite bugfix: `--only` with an unknown name must exit with a
+    clear message listing valid suites, not a raw KeyError."""
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fig99"],
+        capture_output=True, text=True, timeout=300)
+    assert out.returncode != 0
+    err = out.stderr + out.stdout
+    assert "KeyError" not in err
+    assert "unknown suite" in err and "fig99" in err
+    assert "fig5" in err and "kernels" in err   # lists the valid names

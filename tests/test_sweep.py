@@ -1,0 +1,174 @@
+"""Sweep-engine contracts: the batched (vmapped) grid must reproduce the
+sequential per-cell loop bit-for-bit, grouping must be maximal for
+dynamic axes, and the shard_map path must agree across devices."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.netsim import sweep
+from repro.netsim.experiment import ExpSpec
+
+_DUR = 60_000   # short horizons keep the suite fast; grid size does the work
+
+
+def _grid():
+    return [ExpSpec(topology="testbed8", load=load, policy=pol,
+                    duration_us=_DUR, seed=seed)
+            for load in (0.3, 0.5)
+            for pol in ("lcmp", "ecmp", "redte")
+            for seed in (0, 1)]
+
+
+def test_batched_sweep_matches_sequential_bit_for_bit():
+    """The acceptance bar: one vmapped call == the ExpSpec loop, exactly.
+    Covers the dynamic-policy dispatch (3 policies), flow-count padding
+    (2 loads) and seed variation in a single group."""
+    specs = _grid()
+    seq = sweep.run_sweep(specs, sequential=True)
+    bat = sweep.run_sweep(specs)
+    # policy and seed are dynamic axes sharing a trace; the load axis may
+    # chunk on the flow-count padding budget — never per-cell re-tracing
+    assert bat.num_groups <= 2
+    assert bat.num_cells == len(specs)
+    for a, b in zip(seq.results, bat.results):
+        assert np.array_equal(a.final.done, b.final.done), b.spec
+        assert np.array_equal(a.final.fct_us, b.final.fct_us), b.spec
+        assert np.array_equal(a.final.flow_path, b.final.flow_path), b.spec
+        assert np.array_equal(a.stats.slowdown, b.stats.slowdown), b.spec
+        assert np.array_equal(a.util, b.util), b.spec
+        assert a.stats.completed == b.stats.completed
+
+
+def test_map_batch_mode_matches_sequential_bit_for_bit():
+    """The compute-bound strategy (lax.map over cells in one trace) is
+    exactly equivalent too."""
+    specs = _grid()[:4]
+    seq = sweep.run_sweep(specs, sequential=True)
+    bat = sweep.run_sweep(specs, batch_mode="map")
+    for a, b in zip(seq.results, bat.results):
+        assert np.array_equal(a.final.fct_us, b.final.fct_us), b.spec
+        assert np.array_equal(a.final.done, b.final.done), b.spec
+
+
+def test_policy_and_seed_axes_share_one_trace():
+    """A same-load grid (near-equal flow counts) is exactly one compiled
+    group — the whole policy x seed plane in a single XLA computation."""
+    specs = [ExpSpec(topology="testbed8", load=0.3, policy=pol,
+                     duration_us=_DUR, seed=seed)
+             for pol in ("lcmp", "ecmp", "ucmp", "wcmp") for seed in (0, 1)]
+    rep = sweep.run_sweep(specs)
+    assert rep.num_groups == 1
+    assert rep.group_cells == [8]
+
+
+def test_sweep_groups_by_static_axes():
+    """cc and parameter overrides force separate traces; loads don't."""
+    from repro.core.select import SelectParams
+    specs = [ExpSpec(topology="testbed8", load=0.3, cc="dcqcn", duration_us=_DUR),
+             ExpSpec(topology="testbed8", load=0.5, cc="dcqcn", duration_us=_DUR),
+             ExpSpec(topology="testbed8", load=0.3, cc="dctcp", duration_us=_DUR),
+             ExpSpec(topology="testbed8", load=0.3, cc="dcqcn", duration_us=_DUR,
+                     select=SelectParams(alpha=1, beta=1))]
+    keys = [sweep.static_key(s) for s in specs]
+    assert keys[0] == keys[1]
+    assert keys[0] != keys[2]
+    assert keys[0] != keys[3]
+
+
+def test_sweep_mixed_scenarios_and_workloads():
+    """Cells from different scenarios coexist in one call (separate
+    groups) and workload variation stays inside a group."""
+    specs = [ExpSpec(topology="testbed8", workload=wl, load=0.3,
+                     policy="lcmp", duration_us=_DUR)
+             for wl in ("websearch", "fbhdp")]
+    specs += [ExpSpec(topology="parallel:n=3,cap=40", load=0.3,
+                      policy="ecmp", duration_us=_DUR)]
+    rep = sweep.run_sweep(specs)
+    assert rep.num_groups == 2 and rep.num_cells == 3
+    for res in rep.results:
+        assert res.stats.completed > 0
+        assert np.isfinite(res.stats.p50)
+
+
+def test_failover_scenario_matches_legacy_fail_link():
+    """The scenario schedule path must reproduce the legacy
+    cfg.fail_link single-event injection exactly."""
+    import dataclasses
+    from repro.netsim import fluid
+    from repro.netsim.experiment import build_experiment
+
+    legacy_spec = ExpSpec(topology="testbed8", load=0.3, policy="lcmp",
+                          duration_us=120_000, seed=5)
+    _, table, flows, cfg = build_experiment(legacy_spec)
+    cfg = dataclasses.replace(cfg, fail_link=12, fail_at_us=40_000)
+    arrs, st = fluid.build(table, flows, cfg)
+    legacy = fluid.run(arrs, st, cfg)
+
+    scen_spec = dataclasses.replace(
+        legacy_spec, topology="testbed8_failover:fail_ms=40,link=12")
+    _, table2, flows2, cfg2 = build_experiment(scen_spec)
+    assert flows2.num_flows == flows.num_flows   # same world, same traffic
+    arrs2, st2 = fluid.build(table2, flows2, cfg2)
+    final = fluid.run(arrs2, st2, cfg2)
+    assert np.array_equal(np.asarray(legacy.done), np.asarray(final.done))
+    assert np.array_equal(np.asarray(legacy.fct_us), np.asarray(final.fct_us))
+
+
+def test_degradation_shifts_new_placements():
+    """Silent capacity loss: flows stay pinned (no reroute), the run still
+    completes, and the degraded link serves measurably fewer bytes than
+    the healthy baseline."""
+    import dataclasses
+    from repro.netsim import fluid
+    from repro.netsim.experiment import build_experiment
+
+    spec = ExpSpec(topology="parallel:n=2,cap=100", load=0.5, policy="ecmp",
+                   duration_us=150_000, seed=3)
+    _, table, flows, cfg = build_experiment(spec)
+    arrs, st = fluid.build(table, flows, cfg)
+    healthy = fluid.run(arrs, st, cfg)
+
+    first = int(table.path_first[0])
+    cfg_d = dataclasses.replace(cfg, degrade_sched=((first, 30_000, 0.2),))
+    arrs_d, st_d = fluid.build(table, flows, cfg_d)
+    degraded = fluid.run(arrs_d, st_d, cfg_d)
+
+    assert np.asarray(degraded.done).mean() > 0.9
+    assert (float(degraded.serv_bytes[first])
+            < 0.8 * float(healthy.serv_bytes[first]))
+    # silent: placements never move off the degraded path
+    assert np.array_equal(np.asarray(healthy.flow_path)[np.asarray(healthy.done)],
+                          np.asarray(degraded.flow_path)[np.asarray(healthy.done)])
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import numpy as np
+from repro.netsim import sweep
+from repro.netsim.experiment import ExpSpec
+
+specs = [ExpSpec(topology="testbed8", load=0.3, policy=p,
+                 duration_us=40_000, seed=1)
+         for p in ("lcmp", "ecmp", "ucmp")]   # 3 cells pad to 2 devices x 2
+seq = sweep.run_sweep(specs, sequential=True)
+bat = sweep.run_sweep(specs, use_mesh=True)
+same = all(np.array_equal(a.final.fct_us, b.final.fct_us)
+           and np.array_equal(a.final.done, b.final.done)
+           for a, b in zip(seq.results, bat.results))
+print(json.dumps({"same": same, "cells": bat.num_cells}))
+"""
+
+
+def test_shard_map_sweep_matches_sequential():
+    """Cell axis sharded over 2 host devices (subprocess — XLA device
+    count locks at first init) still reproduces the sequential loop."""
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res == {"same": True, "cells": 3}
