@@ -251,6 +251,47 @@ def failover_bench(scale="default", sequential=False) -> List[Row]:
     return rows
 
 
+# ------------------------------------------- staleness ablation (§7.3, new)
+def staleness_ablation(scale="default", sequential=False) -> List[Row]:
+    """[§7.3] Signal-staleness grid on the ``staleness`` scenario (a
+    *remote* span of the good route silently degrades): sig_delay_scale
+    x ctrl_period_us, with the policy axis dynamic inside each trace.
+    Congestion-reactive policies (lcmp, lcmp_w) worsen as the routed
+    signal ages; oblivious ecmp is exactly flat. Each CSV row also
+    records the degraded route's *installed* C_path at horizon end; the
+    ctrl_period_us=0 rows keep the build-time score while every live
+    period shows the repriced one — the control-plane refresh
+    demonstrably repricing the route, visible in the CSV itself."""
+    # degrade early (1/5 of the run): the tail must be dominated by flows
+    # that lived through the stale-signal window, not by generic load
+    deg_ms = max(_DUR[scale] // 5000, 50)
+    top = f"staleness:deg_ms={deg_ms}"
+    grid = [(sds, per) for sds in (0.0, 1.0, 4.0)
+            for per in (0, 50_000, 200_000)]
+    specs = [ExpSpec(topology=top, load=0.5, policy=pol,
+                     duration_us=_DUR[scale], seed=1,
+                     sig_delay_scale=sds, ctrl_period_us=per)
+             for sds, per in grid
+             for pol in ["ecmp", "lcmp", "lcmp_w"]]
+    results, per_cell, summary = _sweep("staleness", specs, sequential)
+    scen, table = build_world(top)
+    deg_link = scen.degrade_sched[0][0]
+    deg_path = int(np.nonzero(
+        (np.asarray(table.path_links) == deg_link).any(-1))[0][0])
+    rows, csv = [summary], []
+    for res in results:
+        s, st = res.spec, res.stats
+        cp = int(res.final.c_path[deg_path])
+        csv.append(f"{s.sig_delay_scale:g},{s.ctrl_period_us},{s.policy},"
+                   f"{st.p50:.3f},{st.p99:.3f},{cp}")
+        rows.append((f"staleness/sds{s.sig_delay_scale:g}"
+                     f"/cp{s.ctrl_period_us // 1000}ms/{s.policy}", per_cell,
+                     f"p50={st.p50:.2f};p99={st.p99:.2f};cpath_deg={cp}"))
+    _csv("staleness_ablation.csv",
+         "sig_delay_scale,ctrl_period_us,policy,p50,p99,cpath_degraded", csv)
+    return rows
+
+
 # ------------------------------------------------- scenario showcase (new)
 def scenarios_bench(scale="default", sequential=False) -> List[Row]:
     """Beyond-paper scenario regimes from the registry: a segmented

@@ -38,6 +38,7 @@ def main() -> None:
         "fig10": lambda: figures.fig10_cc_orthogonality(scale, seq),
         "fig11": lambda: figures.fig11_ablations(scale, seq),
         "failover": lambda: figures.failover_bench(scale, seq),
+        "staleness": lambda: figures.staleness_ablation(scale, seq),
         "scenarios": lambda: figures.scenarios_bench(scale, seq),
         "kernels": kernel_bench.all_benches,
     }

@@ -36,6 +36,25 @@ for cell in run_sweep(specs):
     print(f"  {name:18s} {cell.spec.policy:5s} p50={st.p50:6.2f} "
           f"p99={st.p99:7.2f}  completed {st.completed}/{st.offered}")
 
+print("\n=== Signal staleness (§7.3): how fresh must LCMP's view be? ===")
+# A *remote* span of the good route silently degrades; the ingress only
+# learns about it one backward propagation delay later (sig_delay_scale
+# scales that delay; 0 = oracle) and its installed C_path table only
+# reprices at the next control-plane refresh (ctrl_period_us; 0 = frozen
+# build-time table). ECMP never reads either signal — its cells are the
+# flat control.
+specs = [ExpSpec(topology="staleness:deg_ms=60", load=0.5, policy=pol,
+                 duration_us=300_000, seed=1,
+                 sig_delay_scale=sds, ctrl_period_us=per)
+         for sds, per in [(0.0, 50_000), (1.0, 50_000),
+                          (4.0, 50_000), (1.0, 0)]
+         for pol in ["lcmp", "ecmp"]]
+for cell in run_sweep(specs):
+    s, st = cell.spec, cell.stats
+    ctrl = "frozen" if s.ctrl_period_us == 0 else f"{s.ctrl_period_us//1000}ms"
+    print(f"  delay x{s.sig_delay_scale:g}  ctrl={ctrl:6s} {s.policy:5s} "
+          f"p50={st.p50:6.2f}  p99={st.p99:7.2f}")
+
 print("\n=== Herd mitigation: 1000 flows decide simultaneously ===")
 fids = jnp.arange(1000, dtype=jnp.uint32) * jnp.uint32(2654435761)
 c_path = jnp.array([10, 12, 15, 200, 220, 250])   # 3 good paths, 3 bad

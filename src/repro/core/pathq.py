@@ -78,7 +78,11 @@ def path_bottleneck_stats(link_delay_us: jnp.ndarray, link_cap_gbps: jnp.ndarray
 
     ``path_links``: (P, H) int32 link indices padded with -1;
     ``path_len``  : (P,) number of valid hops.
-    Control-plane-side helper used when installing the C_path table.
+    Control-plane-side helper for installing (and periodically
+    re-installing) the C_path table — the netsim control-plane refresh
+    (``fluid.ctrl_refresh``) calls it each tick with *effective*
+    capacities, so it must accept capacities already scaled by degrade
+    factors/liveness (0 for a dead link).
     """
     H = path_links.shape[-1]
     hop_valid = jnp.arange(H)[None, :] < path_len[:, None]

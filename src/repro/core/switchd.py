@@ -9,9 +9,16 @@ flow cache + two-stage selection into two entry points:
     flows whose egress died — lazy failover) run the full decision and are
     inserted into the cache.
 
-The switch is a pure pytree; every transition is functional and jittable,
-so the same object runs inside the netsim `lax.scan`, inside the
-collective scheduler, and inside property tests.
+The switch is a pure pytree; every transition is functional and
+jittable. It is the switch-local composition used by the unit/property
+tests and as the reference for the Pallas decision kernels. The netsim
+``lax.scan`` (``repro.netsim.fluid``) does NOT run this object: it wires
+the same underlying helpers directly — ``cong.monitor_update`` /
+``calc_cong_cost`` feed the per-step ``hist_c`` score ring that ingress
+decisions read with propagation delay, ``pathq.calc_path_quality`` is
+re-run by the in-scan control-plane refresh (``fluid.ctrl_refresh``),
+and ``select.select_egress`` makes the decision — while flow stickiness
+lives in per-flow ``SimState`` instead of the bounded ``FlowCache``.
 """
 from __future__ import annotations
 

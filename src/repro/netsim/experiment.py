@@ -33,6 +33,9 @@ class ExpSpec:
     seed: int = 0
     pairs: str = "main"              # main | all | <src>-<dst>
     cap_scale: float = 0.125
+    # signal-plane staleness axes (§7.3 ablations; both static/trace-level)
+    sig_delay_scale: float = 1.0     # routing-signal propagation-delay scale
+    ctrl_period_us: int = 100_000    # C_path re-install period (0 = frozen)
     select: Optional[object] = None  # optional SelectParams override
     pathq: Optional[object] = None   # optional PathQParams override
     congp: Optional[object] = None   # optional CongParams override
@@ -84,6 +87,8 @@ def spec_to_cfg(spec: ExpSpec, scen: scenarios.Scenario) -> SimConfig:
     return SimConfig(policy=spec.policy, cc=spec.cc,
                      horizon_us=spec.duration_us * 2,  # let tail flows finish
                      cap_scale=spec.cap_scale,
+                     sig_delay_scale=spec.sig_delay_scale,
+                     ctrl_period_us=spec.ctrl_period_us,
                      fail_sched=scen.fail_sched,
                      degrade_sched=scen.degrade_sched, **kw)
 

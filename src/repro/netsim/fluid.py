@@ -21,6 +21,17 @@ Model (standard fluid FCT-benchmark abstractions):
   refreshed every ``dt`` (the monitor cadence) and new-flow batches run
   the exact ``repro.core`` decision path — a batch arriving in the same
   step *is* the paper's simultaneous-arrival herd case.
+- the *routing* signal is propagation-faithful too: each hop's quantized
+  ``C_cong`` (the ``core.cong`` register-pipeline output, stored per step
+  in the ``hist_c`` ring) reaches the ingress only after the hop's
+  one-way propagation distance back to it (``SimArrays.path_sig_delay``,
+  scaled by ``sig_delay_scale`` for staleness ablations). The decision
+  reads the max over hops of these delayed scores — never raw queue
+  bytes, and never fresher than physics allows.
+- the control plane is live: ``C_path`` is switch *state*, re-installed
+  every ``ctrl_period_us`` from **effective** link capacities (degrade
+  schedule + liveness applied) via ``core.pathq`` — the paper's §7.3
+  update-period knob. ``ctrl_period_us=0`` freezes the build-time table.
 
 Everything dynamic lives in ``SimState`` (a pytree); one ``run()`` call
 lowers to a single XLA while-loop.
@@ -39,13 +50,15 @@ from repro.core import baselines as bl
 from repro.core import cong as congmod
 from repro.core import select as selmod
 from repro.core.cong import CongParams, CongState
-from repro.core.pathq import PathQParams, calc_path_quality
+from repro.core.pathq import (PathQParams, calc_path_quality,
+                              path_bottleneck_stats)
 from repro.core.select import SelectParams
 from repro.core.tables import CELL_BYTES, bootstrap_tables
 from repro.netsim.paths import PathTable
 from repro.traffic.gen import FlowSet
 
-HIST = 8192          # congestion-history ring (steps); must exceed max RTT
+HIST = 8192          # history rings (steps); must exceed the max RTT and
+                     # signal-delay offsets — build() validates this
 
 # Policy name -> dense code. "sweep" is a meta-policy: the step function
 # dispatches on the per-experiment ``SimArrays.policy_code`` scalar instead
@@ -77,6 +90,13 @@ class SimConfig:
     # leave flows effectively uncontrolled. Feedback *delay* stays RTT.
     cc_dec_period_us: int = 1_600
     redte_period_us: int = 100_000
+    # routing-signal staleness: each hop's C_cong reaches the ingress
+    # after scale x its one-way propagation distance back (1.0 = physics;
+    # 0.0 = oracle visibility; >1 models slower telemetry channels)
+    sig_delay_scale: float = 1.0
+    # control-plane C_path re-install period (paper §7.3); 0 = never
+    # refresh (the build-time static table)
+    ctrl_period_us: int = 100_000
     select: SelectParams = SelectParams()
     pathq: PathQParams = PathQParams()
     congp: CongParams = CongParams()
@@ -128,11 +148,15 @@ class SimState:
     q_bytes: jnp.ndarray       # (L,) f32
     hist_q: jnp.ndarray        # (L, HIST) f32 queue bytes
     hist_u: jnp.ndarray        # (L, HIST) f32 utilization
+    hist_c: jnp.ndarray        # (L, HIST) i32 quantized C_cong per step
     u_ewma: jnp.ndarray        # (L,) f32
     link_alive: jnp.ndarray    # (L,) bool
     serv_bytes: jnp.ndarray    # (L,) f32 served-byte counter (metrics)
     cong: CongState            # LCMP per-link registers
     c_cong: jnp.ndarray        # (L,) i32 current LCMP congestion score
+    # control-plane installed path scores — *state*, periodically
+    # re-installed from effective capacities (see ``ctrl_refresh``)
+    c_path: jnp.ndarray        # (NP,) i32
     redte_w: jnp.ndarray       # (NPAIR, K) i32 split weights
 
 
@@ -147,7 +171,6 @@ class SimArrays:
     path_cap: jnp.ndarray      # (NP,) f32 bytes/us (scaled bottleneck)
     path_cap_gbps: jnp.ndarray # (NP,) i32
     path_first: jnp.ndarray    # (NP,) i32
-    c_path: jnp.ndarray        # (NP,) i32 — control-plane installed score
     pair_cand: jnp.ndarray     # (NPAIR, K) i32
     arrivals: jnp.ndarray      # (T, A) i32 flow idx, -1 pad
     f_arr_us: jnp.ndarray      # (F,) f32
@@ -159,6 +182,12 @@ class SimArrays:
     link_fail_step: jnp.ndarray = None    # (L,) i32 trip step (_NEVER)
     link_deg_step: jnp.ndarray = None     # (L,) i32 degradation onset step
     link_deg_factor: jnp.ndarray = None   # (L,) f32 cap multiplier after onset
+    path_len: jnp.ndarray = None          # (NP,) i32 valid hop count
+    link_delay_us: jnp.ndarray = None     # (L,) i32 one-way propagation
+    # (NP, H) i32 — steps each hop's congestion signal takes to propagate
+    # back to the ingress (cumulative upstream one-way delay, scaled by
+    # cfg.sig_delay_scale); hop 0 is the ingress's own egress port (0)
+    path_sig_delay: jnp.ndarray = None
     tables: object = None      # SwitchTables
 
 
@@ -180,6 +209,30 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
     c_path = calc_path_quality(jnp.asarray(table.path_prop_us),
                                jnp.asarray(table.path_cap),
                                tb.cap_thresh, cfg.pathq)
+
+    # per-path per-hop signal-propagation offsets: hop h's congestion
+    # score travels back over hops 0..h-1, so the ingress sees it
+    # sum(delay[0..h-1]) late (x sig_delay_scale)
+    link_delay_us = _infer_link_delays(table)
+    pl = np.asarray(table.path_links)
+    hop_delay = np.where(pl >= 0, link_delay_us[np.maximum(pl, 0)], 0)
+    upstream = np.concatenate([np.zeros((pl.shape[0], 1), np.int64),
+                               np.cumsum(hop_delay, -1)[:, :-1]], axis=1)
+    sig_delay_f = cfg.sig_delay_scale * upstream / cfg.dt_us
+    sig_delay = sig_delay_f.astype(np.int32)
+
+    # the history rings silently alias once a read offset wraps: a
+    # "delayed" read would return recent/future data. Guard both readers
+    # (on the pre-cast floats — an int32-wrapped offset must not pass).
+    max_rtt = int(np.max(2 * np.asarray(table.path_prop_us) // cfg.dt_us,
+                         initial=1))
+    max_sig = int(sig_delay_f.max(initial=0))
+    if max(max_rtt, max_sig) >= HIST:
+        raise ValueError(
+            f"history ring too short: HIST={HIST} steps but the worst path "
+            f"needs rtt={max_rtt} and signal-delay={max_sig} steps at "
+            f"dt_us={cfg.dt_us} (sig_delay_scale={cfg.sig_delay_scale}); "
+            "increase dt_us or reduce sig_delay_scale")
 
     # arrivals bucketed by step
     T = cfg.num_steps
@@ -213,7 +266,6 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
         path_cap=jnp.asarray(table.path_cap * 125.0 * cfg.cap_scale, jnp.float32),
         path_cap_gbps=jnp.asarray(table.path_cap),
         path_first=jnp.asarray(table.path_first),
-        c_path=c_path,
         pair_cand=jnp.asarray(table.pair_cand),
         arrivals=jnp.asarray(arrivals),
         f_arr_us=jnp.asarray(flows.arrival_us, jnp.float32),
@@ -225,6 +277,9 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
         link_fail_step=jnp.asarray(fail_step),
         link_deg_step=jnp.asarray(deg_step),
         link_deg_factor=jnp.asarray(deg_factor),
+        path_len=jnp.asarray(table.path_len),
+        link_delay_us=jnp.asarray(link_delay_us, jnp.int32),
+        path_sig_delay=jnp.asarray(sig_delay),
         tables=tb,
     )
     F = flows.num_flows
@@ -246,11 +301,13 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
         q_bytes=jnp.zeros((L,), jnp.float32),
         hist_q=jnp.zeros((L, HIST), jnp.float32),
         hist_u=jnp.zeros((L, HIST), jnp.float32),
+        hist_c=jnp.zeros((L, HIST), jnp.int32),
         u_ewma=jnp.zeros((L,), jnp.float32),
         link_alive=jnp.ones((L,), bool),
         serv_bytes=jnp.zeros((L,), jnp.float32),
         cong=CongState.init(L),
         c_cong=jnp.zeros((L,), jnp.int32),
+        c_path=c_path,
         redte_w=jnp.ones((NPAIR, K), jnp.int32),
     )
     return arr, state
@@ -265,13 +322,62 @@ def _infer_link_caps(table: PathTable) -> np.ndarray:
     raise ValueError("call attach_link_caps(table, topo) before build()")
 
 
+def _infer_link_delays(table: PathTable) -> np.ndarray:
+    if hasattr(table, "_link_delays"):
+        return table._link_delays  # set by attach_link_caps
+    raise ValueError("call attach_link_caps(table, topo) before build()")
+
+
 def attach_link_caps(table: PathTable, topo) -> PathTable:
-    _, _, cap, _ = topo.arrays()
+    _, _, cap, dly = topo.arrays()
     object.__setattr__(table, "_link_caps", cap.astype(np.float32))
+    object.__setattr__(table, "_link_delays", dly.astype(np.int64))
     return table
 
 
 # --------------------------------------------------------------------- step
+def path_cong_view(hist_c: jnp.ndarray, path_links: jnp.ndarray,
+                   sig_delay: jnp.ndarray, t) -> jnp.ndarray:
+    """Ingress-visible congestion of candidate paths at step ``t``.
+
+    The max over hops of each hop's *quantized* ``C_cong`` (the
+    ``core.cong`` register-pipeline output recorded in the ``hist_c``
+    ring), read ``sig_delay`` steps late — the one-way propagation
+    distance the signal travels back to the ingress. A remote hop's
+    congestion can never be seen earlier than physics delivers it.
+
+    ``path_links``/``sig_delay``: (..., H) hop link indices (-1 pad) and
+    per-hop delay offsets; returns (...,) int32 scores.
+    """
+    lidx = jnp.maximum(path_links, 0)
+    slot = jnp.asarray((t - sig_delay) % HIST, jnp.int32)
+    v = hist_c.reshape(-1)[lidx * HIST + slot]
+    return jnp.where(path_links >= 0, v, 0).max(-1)
+
+
+def ctrl_refresh(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> jnp.ndarray:
+    """One control-plane tick (paper §3.2 install, §7.3 update period):
+    recompute the C_path table from *effective* per-link capacities — the
+    degrade schedule and link liveness applied — via the shared
+    ``core.pathq`` helpers. Propagation delays are physical and static;
+    only the capacity term can change at runtime."""
+    eff = ar.link_cap_gbps * jnp.where(t >= ar.link_deg_step,
+                                       ar.link_deg_factor, 1.0)
+    eff = jnp.where(st.link_alive, eff, 0.0).astype(jnp.int32)
+    _, cap_eff = path_bottleneck_stats(ar.link_delay_us, eff,
+                                       ar.path_links, ar.path_len)
+    return calc_path_quality(ar.path_prop, cap_eff,
+                             ar.tables.cap_thresh, cfg.pathq)
+
+
+def _path_queue_wait(st: SimState, ar: SimArrays, path_idx) -> jnp.ndarray:
+    """Standing-queue wait a path's first packets see: sum over hops of
+    queue bytes / link capacity. ``path_idx`` must be pre-clamped >= 0."""
+    hop = ar.path_links[path_idx]
+    return jnp.where(hop >= 0, st.q_bytes[jnp.maximum(hop, 0)]
+                     / ar.link_cap[jnp.maximum(hop, 0)], 0.0).sum(-1)
+
+
 def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
     """Decide paths for the batch of flows arriving this step."""
     idx = ar.arrivals[t]                        # (A,)
@@ -289,8 +395,8 @@ def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
     valid = cand_ok & alive
 
     fid = ar.f_id[fidx]
-    c_path = ar.c_path[cpad]
-    c_cong = st.c_cong[ar.path_first[cpad]]
+    c_path = st.c_path[cpad]
+    c_cong = path_cong_view(st.hist_c, hop, ar.path_sig_delay[cpad], t)
     delay = ar.path_prop[cpad]
     capg = ar.path_cap_gbps[cpad]
 
@@ -330,10 +436,7 @@ def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
     ok = chosen >= 0
     cpath_sel = jnp.maximum(chosen, 0)
     # queue wait seen by the first packets (standing queues on the path)
-    hop_sel = ar.path_links[cpath_sel]                          # (A,H)
-    hop_ok = hop_sel >= 0
-    qw = jnp.where(hop_ok, st.q_bytes[jnp.maximum(hop_sel, 0)]
-                   / ar.link_cap[jnp.maximum(hop_sel, 0)], 0.0).sum(-1)
+    qw = _path_queue_wait(st, ar, cpath_sel)
 
     rtt = jnp.maximum(2 * ar.path_prop[cpath_sel] // cfg.dt_us, 1)
 
@@ -480,12 +583,26 @@ def make_step(ar: SimArrays, cfg: SimConfig):
                               lambda s: _reroute_dead(t, s, ar, cfg),
                               lambda s: s, st)
 
-        # 1) switch monitor tick (every dt — the paper's "modest cadence")
+        # 1) switch monitor tick (every dt — the paper's "modest cadence").
+        # The quantized score lands in the hist_c ring at slot t; ingress
+        # decisions read it back hop-by-hop with propagation delay.
         qcells = (st.q_bytes / CELL_BYTES).astype(jnp.int32)
         cong = congmod.monitor_update(st.cong, qcells, t * cfg.dt_us,
                                       ar.tables, cfg.congp)
         c_cong = congmod.calc_cong_cost(cong, ar.tables, cfg.congp)
-        st = dataclasses.replace(st, cong=cong, c_cong=c_cong)
+        st = dataclasses.replace(
+            st, cong=cong, c_cong=c_cong,
+            hist_c=st.hist_c.at[:, jnp.asarray(t % HIST, jnp.int32)].set(c_cong))
+
+        # 1b) control-plane refresh: re-install C_path from effective
+        # capacities every ctrl_period_us. Skipped entirely when no
+        # schedule can change them (the refresh would be a no-op) or when
+        # the period is 0 (frozen build-time table).
+        if cfg.ctrl_period_us > 0 and (cfg.has_failures or cfg.has_degrade):
+            period = max(cfg.ctrl_period_us // cfg.dt_us, 1)
+            st = dataclasses.replace(
+                st, c_path=jnp.where((t % period) == 0,
+                                     ctrl_refresh(t, st, ar, cfg), st.c_path))
 
         # 2) arrivals + routing decisions (the herd batch)
         st = _route_arrivals(t, st, ar, cfg)
@@ -575,8 +692,10 @@ def _reroute_dead(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> SimState:
     h = ar.path_links[cpad]
     h_alive = jnp.where(h >= 0, st.link_alive[jnp.maximum(h, 0)], True).all(-1)
     valid = (cand >= 0) & h_alive
-    c_path = ar.c_path[cpad]
-    c_cong = st.c_cong[ar.path_first[cpad]]
+    c_path = st.c_path[cpad]
+    # the reroute runs before this step's monitor tick, so slot t is not
+    # yet written: the freshest signal physics offers here is step t-1
+    c_cong = path_cong_view(st.hist_c, h, ar.path_sig_delay[cpad], t - 1)
     lcmp_k = lambda: selmod.select_egress(ar.f_id, c_path, c_cong, valid,
                                           cfg.select)[0]
     ecmp_k = lambda: bl.ecmp(ar.f_id, ar.path_prop[cpad],
@@ -592,12 +711,22 @@ def _reroute_dead(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> SimState:
     new_path = jnp.take_along_axis(cand, jnp.maximum(k_idx, 0)[:, None],
                                    axis=1)[:, 0]
     ok = move & (k_idx >= 0)
+    npad = jnp.maximum(new_path, 0)
+    # CC state re-initializes with the path: a rerouted flow is "first
+    # packets" again — target line rate of the NEW path, a fresh MD
+    # timer, and the new path's standing-queue wait (not the dead one's)
+    qw = _path_queue_wait(st, ar, npad)
     return dataclasses.replace(
         st,
         flow_path=jnp.where(ok, new_path, st.flow_path),
-        rate=jnp.where(ok, ar.path_cap[jnp.maximum(new_path, 0)], st.rate),
+        rate=jnp.where(ok, ar.path_cap[npad], st.rate),
+        cc_target=jnp.where(ok, ar.path_cap[npad], st.cc_target),
+        last_dec=jnp.where(ok, jnp.int32(-(1 << 20)), st.last_dec),
+        cc_alpha=jnp.where(ok, 0.0, st.cc_alpha),
+        prev_delay=jnp.where(ok, 0.0, st.prev_delay),
+        extra_wait=jnp.where(ok, qw, st.extra_wait),
         rtt_steps=jnp.where(
-            ok, jnp.maximum(2 * ar.path_prop[jnp.maximum(new_path, 0)]
+            ok, jnp.maximum(2 * ar.path_prop[npad]
                             // cfg.dt_us, 1).astype(jnp.int32), st.rtt_steps),
         route_step=jnp.where(ok, jnp.int32(0) + t, st.route_step),
         active=jnp.where(move & (k_idx < 0), False, st.active))

@@ -172,6 +172,29 @@ def bso13_degrade(at_ms: int = 100, factor: float = 0.25) -> Scenario:
 
 
 @register
+def staleness(deg_ms: int = 100, factor: float = 0.1,
+              src: int = 2, dst: int = 7) -> Scenario:
+    """Stale-signal stress family (the §7.3 ablation regime): testbed8
+    main pair DC1->DC8, with the *remote* span of its good via-DC3
+    candidate route — the DC3->DC8 tail hop, one 25 ms propagation away
+    from the DC1 ingress — silently
+    degraded to ``factor`` of its 400G at ``deg_ms``. The queue then
+    builds a full one-way delay from the decision point, so placement
+    quality hinges on how fresh the ingress's congestion view
+    (``ExpSpec.sig_delay_scale``) and installed C_path table
+    (``ExpSpec.ctrl_period_us``) are; sweep both over this scenario to
+    reproduce the staleness ablation grid. (Degrading a *first* hop would
+    be invisible to the ablation: the ingress reads its own egress
+    registers with zero delay.)"""
+    t = topomod.testbed_8dc()
+    sched = ((link_index(t, int(src), int(dst)),
+              int(deg_ms) * 1000, float(factor)),)
+    return Scenario(f"staleness:deg_ms={deg_ms},factor={factor}", t,
+                    main_pair=(0, 7), degrade_sched=sched,
+                    description=staleness.__doc__)
+
+
+@register
 def jitter(base: str = "testbed8", frac: float = 0.2, seed: int = 0) -> Scenario:
     """Delay-asymmetry jitter over a base scenario's topology: every
     directed link's delay independently scaled by U[1-frac, 1+frac], so

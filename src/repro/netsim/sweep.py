@@ -67,8 +67,8 @@ class CellResult:
     """One cell's outputs, sliced back out of the batch (numpy)."""
     spec: ExpSpec
     stats: metrics.FCTStats
-    util: np.ndarray           # (L,) nominal-capacity utilization
-    final: SimpleNamespace     # done / fct_us / flow_path / serv_bytes
+    util: np.ndarray           # (L,) effective-capacity utilization
+    final: SimpleNamespace     # done / fct_us / flow_path / serv_bytes / c_path
     flows: object              # the cell's FlowSet
 
 
@@ -231,7 +231,8 @@ def run_sweep(specs: Sequence[ExpSpec], sequential: bool = False,
                     done=np.asarray(final.done),
                     fct_us=np.asarray(final.fct_us),
                     flow_path=np.asarray(final.flow_path),
-                    serv_bytes=np.asarray(final.serv_bytes)),
+                    serv_bytes=np.asarray(final.serv_bytes),
+                    c_path=np.asarray(final.c_path)),
                 flows=flows))
         return SweepReport(results, len(results), len(results),
                            time.perf_counter() - t0, [1] * len(results))
@@ -299,7 +300,8 @@ def run_sweep(specs: Sequence[ExpSpec], sequential: bool = False,
                 view = SimpleNamespace(done=final.done[j, :F],
                                        fct_us=final.fct_us[j, :F],
                                        flow_path=final.flow_path[j, :F],
-                                       serv_bytes=final.serv_bytes[j])
+                                       serv_bytes=final.serv_bytes[j],
+                                       c_path=final.c_path[j])
                 stats = metrics.fct_stats(view, table, flows, cfg)
                 util = metrics.link_utilization(view, shared, cfg)
                 results[i] = CellResult(spec=spec, stats=stats, util=util,

@@ -33,11 +33,13 @@ def _state_two_flows(t, rtt):
         q_bytes=jnp.zeros((1,), jnp.float32),
         hist_q=jnp.asarray(hist_q),
         hist_u=jnp.zeros((1, fluid.HIST), jnp.float32),
+        hist_c=jnp.zeros((1, fluid.HIST), jnp.int32),
         u_ewma=jnp.zeros((1,), jnp.float32),
         link_alive=jnp.ones((1,), bool),
         serv_bytes=jnp.zeros((1,), jnp.float32),
         cong=CongState.init(1),
         c_cong=jnp.zeros((1,), jnp.int32),
+        c_path=jnp.zeros((1,), jnp.int32),
         redte_w=jnp.ones((1, 1), jnp.int32),
     )
 
@@ -47,7 +49,7 @@ def _arrays():
         link_cap=jnp.asarray([125.0], jnp.float32),
         link_cap_gbps=None, path_links=None, path_prop=None,
         path_cap=jnp.asarray([100.0], jnp.float32),
-        path_cap_gbps=None, path_first=None, c_path=None, pair_cand=None,
+        path_cap_gbps=None, path_first=None, pair_cand=None,
         arrivals=None, f_arr_us=None, f_size=None, f_pair=None,
         f_id=jnp.asarray([1, 2], jnp.uint32), tables=None)
 

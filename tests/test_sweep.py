@@ -93,6 +93,25 @@ def test_sweep_mixed_scenarios_and_workloads():
         assert np.isfinite(res.stats.p50)
 
 
+def test_sweep_staleness_axes_bit_for_bit():
+    """The new signal-plane axes: sig_delay_scale/ctrl_period_us are
+    static (trace-level) axes — each value pair is its own group, the
+    policy axis stays dynamic inside, and the batched run reproduces the
+    sequential loop exactly, live c_path table included."""
+    specs = [ExpSpec(topology="staleness:deg_ms=20", load=0.3, policy=pol,
+                     duration_us=_DUR, sig_delay_scale=sds,
+                     ctrl_period_us=25_000)
+             for sds in (0.0, 2.0) for pol in ("lcmp", "ecmp")]
+    seq = sweep.run_sweep(specs, sequential=True)
+    bat = sweep.run_sweep(specs)
+    assert bat.num_groups == 2           # one trace per delay scale
+    for a, b in zip(seq.results, bat.results):
+        assert np.array_equal(a.final.fct_us, b.final.fct_us), b.spec
+        assert np.array_equal(a.final.done, b.final.done), b.spec
+        assert np.array_equal(a.final.c_path, b.final.c_path), b.spec
+        assert np.array_equal(a.util, b.util), b.spec
+
+
 def test_failover_scenario_matches_legacy_fail_link():
     """The scenario schedule path must reproduce the legacy
     cfg.fail_link single-event injection exactly."""
