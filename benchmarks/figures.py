@@ -1,14 +1,23 @@
 """One benchmark per paper table/figure (LCMP, EuroSys'26).
 
 Each function returns a list of CSV rows ``(name, us_per_call, derived)``
-and writes full CSVs to benchmarks/out/. Every figure's grid now runs
+and writes full CSVs to benchmarks/out/. Every figure's grid runs
 through ``repro.netsim.sweep``: cells sharing a trace (same scenario /
-cc / parameter overrides — policy, seed and workload are dynamic axes,
-loads chunk on a padding budget) execute as a few compiled XLA
-computations instead of a Python loop of re-traced ``fluid.run`` calls. ``us_per_call`` is therefore the group wall-clock
-amortized over its cells; each figure also emits a ``<fig>/sweep``
-summary row with the total wall-clock and group count, so the CSV stream
-records the sweep-engine speedup over time.
+engine / cc / parameter overrides — policy, seed and workload are
+dynamic axes, loads chunk on a padding budget) execute as a few compiled
+XLA computations instead of a Python loop of re-traced ``run`` calls.
+``us_per_call`` is therefore the group wall-clock amortized over its
+cells; each figure also emits a ``<fig>/sweep`` summary row with the
+total wall-clock and group count, so the CSV stream records the
+sweep-engine speedup over time.
+
+Every suite takes an ``engine`` argument (``benchmarks.run --engine``):
+``"fluid"`` (default) or ``"packet"`` re-runs the same grid on the
+packet-level backend — rows are tagged ``fig5[packet]/...`` and CSVs
+written as ``<name>.packet.csv`` so fluid results are never clobbered.
+The ``fidelity`` suite is the exception: it *always* runs both engines
+and cross-validates them (the paper's testbed-vs-NS-3 §6 check, with
+the packet engine standing in for NS-3 and the fluid engine under test).
 
 Reduced-scale defaults (duration, cap_scale) keep the whole suite
 CPU-tractable; pass scale="full" for paper-scale horizons. Pass
@@ -34,11 +43,22 @@ Row = Tuple[str, float, str]
 _DUR = {"quick": 300_000, "default": 400_000, "full": 1_500_000}
 _SIZE_EDGES = [0, 3e3, 1e4, 3e4, 1e5, 1e6, 1e7, 1e9]
 
+
 def _csv(name: str, header: str, rows: List[str]) -> None:
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, name), "w") as f:
         f.write(header + "\n")
         f.writelines(r + "\n" for r in rows)
+
+
+def _tag(figname: str, engine: str) -> str:
+    """Row-name prefix for a suite run on a non-default engine."""
+    return figname if engine == "fluid" else f"{figname}[{engine}]"
+
+
+def _csvfile(name: str, engine: str) -> str:
+    """CSV filename per engine (fluid keeps the historical names)."""
+    return name if engine == "fluid" else name.replace(".csv", f".{engine}.csv")
 
 
 def _sweep(figname: str, specs: List[ExpSpec], sequential: bool):
@@ -54,57 +74,66 @@ def _sweep(figname: str, specs: List[ExpSpec], sequential: bool):
 
 
 # ------------------------------------------------------------------ Figure 1
-def fig1_link_utilization(scale="default", sequential=False) -> List[Row]:
+def fig1_link_utilization(scale="default", sequential=False,
+                          engine="fluid") -> List[Row]:
     """[Motivation] per-link utilization under ECMP/UCMP/LCMP, 8-DC, 30%."""
+    fig = _tag("fig1", engine)
     longhaul = {"DC1-DC2": 0, "DC1-DC3": 4, "DC1-DC4": 8,
                 "DC1-DC5": 12, "DC1-DC6": 16, "DC1-DC7": 20}
     pols = ["ecmp", "ucmp", "lcmp"]
-    specs = [ExpSpec(topology="testbed8", load=0.3, policy=pol,
+    specs = [ExpSpec(topology="testbed8", load=0.3, policy=pol, engine=engine,
                      duration_us=_DUR[scale]) for pol in pols]
-    results, per_cell, summary = _sweep("fig1", specs, sequential)
+    results, per_cell, summary = _sweep(fig, specs, sequential)
     rows, csv = [summary], []
     for res in results:
         u = {k: float(res.util[i]) for k, i in longhaul.items()}
         csv += [f"{res.spec.policy},{k},{v:.4f}" for k, v in u.items()]
-        rows.append((f"fig1/{res.spec.policy}", per_cell,
+        rows.append((f"{fig}/{res.spec.policy}", per_cell,
                      "util=" + "|".join(f"{v:.3f}" for v in u.values())))
-    _csv("fig1_utilization.csv", "policy,link,utilization", csv)
+    _csv(_csvfile("fig1_utilization.csv", engine), "policy,link,utilization",
+         csv)
     return rows
 
 
 # ------------------------------------------------------------------ Figure 5
-def fig5_testbed_fct(scale="default", sequential=False) -> List[Row]:
+def fig5_testbed_fct(scale="default", sequential=False,
+                     engine="fluid") -> List[Row]:
     """Median/P99 FCT slowdown, Web Search, 8-DC testbed, 30/50/80% load.
 
     Each load's 5-policy row shares one trace; loads chunk by flow count."""
+    fig = _tag("fig5", engine)
     specs = [ExpSpec(topology="testbed8", load=load, policy=pol,
-                     duration_us=_DUR[scale])
+                     engine=engine, duration_us=_DUR[scale])
              for load in [0.3, 0.5, 0.8]
              for pol in ["ecmp", "ucmp", "redte", "lcmp", "lcmp_w"]]
-    results, per_cell, summary = _sweep("fig5", specs, sequential)
+    results, per_cell, summary = _sweep(fig, specs, sequential)
     rows, csv = [summary], []
     for res in results:
         s, st = res.spec, res.stats
         csv.append(f"{s.load},{s.policy},{st.p50:.3f},{st.p99:.3f},"
                    f"{st.completed}")
-        rows.append((f"fig5/load{int(s.load*100)}/{s.policy}", per_cell,
+        rows.append((f"{fig}/load{int(s.load*100)}/{s.policy}", per_cell,
                      f"p50={st.p50:.2f};p99={st.p99:.2f}"))
-    _csv("fig5_testbed.csv", "load,policy,p50,p99,completed", csv)
+    _csv(_csvfile("fig5_testbed.csv", engine), "load,policy,p50,p99,completed",
+         csv)
     return rows
 
 
 # ------------------------------------------------------------------ Figure 6
-def fig6_fidelity(scale="default", sequential=False) -> List[Row]:
-    """[Simulator fidelity] The paper correlates testbed vs NS-3 (r>=0.95).
-    Without hardware we check the analogous internal-consistency property:
-    per-policy slowdowns correlate across independent seeds (determinism +
-    stability of the simulation platform)."""
+def fig6_fidelity(scale="default", sequential=False,
+                  engine="fluid") -> List[Row]:
+    """[Simulator stability] per-policy slowdowns must correlate across
+    independent seeds (determinism + stability of the platform). The
+    cross-*engine* fidelity check — the paper's actual testbed-vs-NS-3
+    §6 comparison — is the separate ``fidelity`` suite."""
+    fig = _tag("fig6", engine)
     cells = [(pol, load, seed)
              for pol in ["ecmp", "ucmp", "lcmp"]
              for load in [0.3, 0.5] for seed in (1, 2)]
     specs = [ExpSpec(topology="testbed8", load=load, policy=pol, seed=seed,
-                     duration_us=_DUR["quick"]) for pol, load, seed in cells]
-    results, _, summary = _sweep("fig6", specs, sequential)
+                     engine=engine, duration_us=_DUR["quick"])
+             for pol, load, seed in cells]
+    results, _, summary = _sweep(fig, specs, sequential)
     by = {cell: res.stats for cell, res in zip(cells, results)}
     xs, ys, csv = [], [], []
     for pol in ["ecmp", "ucmp", "lcmp"]:
@@ -115,27 +144,31 @@ def fig6_fidelity(scale="default", sequential=False) -> List[Row]:
             csv.append(f"{pol},{load},{a.p50:.3f},{b.p50:.3f},"
                        f"{a.p99:.3f},{b.p99:.3f}")
     r = float(np.corrcoef(np.log(xs), np.log(ys))[0, 1])
-    _csv("fig6_fidelity.csv",
+    _csv(_csvfile("fig6_fidelity.csv", engine),
          "policy,load,p50_seed1,p50_seed2,p99_seed1,p99_seed2", csv)
-    return [summary, ("fig6/seed-correlation", 0.0, f"pearson_log={r:.3f}")]
+    return [summary, (f"{fig}/seed-correlation", 0.0, f"pearson_log={r:.3f}")]
 
 
 # -------------------------------------------------------------- Figures 7+8
-def fig7_8_large_scale(scale="default", sequential=False) -> List[Row]:
+def fig7_8_large_scale(scale="default", sequential=False,
+                       engine="fluid") -> List[Row]:
     """13-DC all-to-all system-wide (Fig. 7) + the multi-path DC-pair case
     study (Fig. 8) extracted from the same runs."""
+    fig7, fig8 = _tag("fig7", engine), _tag("fig8", engine)
     specs = [ExpSpec(topology="bso13", load=load, policy=pol, pairs="all",
-                     duration_us=_DUR[scale], cap_scale=0.0625)
+                     engine=engine, duration_us=_DUR[scale],
+                     cap_scale=0.0625)
              for load in [0.3, 0.5, 0.8]
              for pol in ["ecmp", "ucmp", "redte", "lcmp"]]
-    results, per_cell, summary = _sweep("fig7_8", specs, sequential)
+    results, per_cell, summary = _sweep(_tag("fig7_8", engine), specs,
+                                        sequential)
     _, table = build_world("bso13")
     multi = np.nonzero(table.pair_ncand >= 3)[0]
     rows, csv7, csv8 = [summary], [], []
     for res in results:
         s, st = res.spec, res.stats
         csv7.append(f"{s.load},{s.policy},{st.p50:.3f},{st.p99:.3f}")
-        rows.append((f"fig7/load{int(s.load*100)}/{s.policy}", per_cell,
+        rows.append((f"{fig7}/load{int(s.load*100)}/{s.policy}", per_cell,
                      f"p50={st.p50:.2f};p99={st.p99:.2f}"))
         # Fig 8: restrict to pairs with multiple near-equal candidates
         sel = np.isin(res.flows.pair_id, multi)
@@ -147,59 +180,66 @@ def fig7_8_large_scale(scale="default", sequential=False) -> List[Row]:
             sl = np.maximum(res.final.fct_us[done] / ideal[done], 1)
             p50, p99 = np.percentile(sl, 50), np.percentile(sl, 99)
             csv8.append(f"{s.load},{s.policy},{p50:.3f},{p99:.3f}")
-            rows.append((f"fig8/load{int(s.load*100)}/{s.policy}", per_cell,
+            rows.append((f"{fig8}/load{int(s.load*100)}/{s.policy}", per_cell,
                          f"p50={p50:.2f};p99={p99:.2f}"))
-    _csv("fig7_system_wide.csv", "load,policy,p50,p99", csv7)
-    _csv("fig8_dcpair.csv", "load,policy,p50,p99", csv8)
+    _csv(_csvfile("fig7_system_wide.csv", engine), "load,policy,p50,p99", csv7)
+    _csv(_csvfile("fig8_dcpair.csv", engine), "load,policy,p50,p99", csv8)
     return rows
 
 
 # ------------------------------------------------------------------ Figure 9
-def fig9_workloads(scale="default", sequential=False) -> List[Row]:
+def fig9_workloads(scale="default", sequential=False,
+                   engine="fluid") -> List[Row]:
     """Workload generality: the 3-workload x 3-policy grid is one trace
     (workloads only change flow-table contents)."""
+    fig = _tag("fig9", engine)
     specs = [ExpSpec(topology="testbed8", workload=wl, load=0.3, policy=pol,
-                     duration_us=_DUR[scale])
+                     engine=engine, duration_us=_DUR[scale])
              for wl in ["websearch", "fbhdp", "alistorage"]
              for pol in ["ecmp", "ucmp", "lcmp"]]
-    results, per_cell, summary = _sweep("fig9", specs, sequential)
+    results, per_cell, summary = _sweep(fig, specs, sequential)
     rows, csv = [summary], []
     for res in results:
         s, st = res.spec, res.stats
         csv.append(f"{s.workload},{s.policy},{st.p50:.3f},{st.p99:.3f}")
-        rows.append((f"fig9/{s.workload}/{s.policy}", per_cell,
+        rows.append((f"{fig}/{s.workload}/{s.policy}", per_cell,
                      f"p50={st.p50:.2f};p99={st.p99:.2f}"))
-    _csv("fig9_workloads.csv", "workload,policy,p50,p99", csv)
+    _csv(_csvfile("fig9_workloads.csv", engine), "workload,policy,p50,p99",
+         csv)
     return rows
 
 
 # ----------------------------------------------------------------- Figure 10
-def fig10_cc_orthogonality(scale="default", sequential=False) -> List[Row]:
+def fig10_cc_orthogonality(scale="default", sequential=False,
+                           engine="fluid") -> List[Row]:
     """CC orthogonality: cc is a static (trace-level) axis, so this grid
     compiles once per CC law and vmaps the policy axis inside each."""
+    fig = _tag("fig10", engine)
     specs = [ExpSpec(topology="testbed8", load=0.3, policy=pol, cc=cc,
-                     duration_us=_DUR[scale])
+                     engine=engine, duration_us=_DUR[scale])
              for cc in ["dcqcn", "hpcc", "timely", "dctcp"]
              for pol in ["ecmp", "ucmp", "lcmp"]]
-    results, per_cell, summary = _sweep("fig10", specs, sequential)
+    results, per_cell, summary = _sweep(fig, specs, sequential)
     rows, csv = [summary], []
     for res in results:
         s, st = res.spec, res.stats
         csv.append(f"{s.cc},{s.policy},{st.p50:.3f},{st.p99:.3f}")
-        rows.append((f"fig10/{s.cc}/{s.policy}", per_cell,
+        rows.append((f"{fig}/{s.cc}/{s.policy}", per_cell,
                      f"p50={st.p50:.2f};p99={st.p99:.2f}"))
-    _csv("fig10_cc.csv", "cc,policy,p50,p99", csv)
+    _csv(_csvfile("fig10_cc.csv", engine), "cc,policy,p50,p99", csv)
     return rows
 
 
 # ----------------------------------------------------------------- Figure 11
-def fig11_ablations(scale="default", sequential=False) -> List[Row]:
+def fig11_ablations(scale="default", sequential=False,
+                    engine="fluid") -> List[Row]:
     """(a) rm-alpha/rm-beta; (b) global (alpha,beta); (c) (w_dl,w_lc);
     (d) (w_ql,w_tl,w_dp) — per-size-bucket p50/p99 on the testbed @30%.
 
     Parameter dataclasses are static (baked into the trace), so each
     variant is its own sweep group — the engine handles the degenerate
     1-cell-per-group grid transparently."""
+    fig = _tag("fig11", engine)
     variants = {
         # (a) component ablation
         "full": {},
@@ -216,64 +256,78 @@ def fig11_ablations(scale="default", sequential=False) -> List[Row]:
         "cg-1-1-2": dict(congp=CongParams(w_ql=1, w_tl=1, w_dp=2)),
     }
     specs = [ExpSpec(topology="testbed8", load=0.3, policy="lcmp",
-                     duration_us=_DUR[scale], **over)
+                     engine=engine, duration_us=_DUR[scale], **over)
              for over in variants.values()]
-    results, per_cell, summary = _sweep("fig11", specs, sequential)
+    results, per_cell, summary = _sweep(fig, specs, sequential)
     rows, csv = [summary], []
     for name, res in zip(variants, results):
         st = res.stats
         for b, v in st.by_size_bucket(_SIZE_EDGES).items():
             csv.append(f"{name},{b},{v['p50']:.3f},{v['p99']:.3f},{v['n']}")
-        rows.append((f"fig11/{name}", per_cell,
+        rows.append((f"{fig}/{name}", per_cell,
                      f"p50={st.p50:.2f};p99={st.p99:.2f}"))
-    _csv("fig11_ablations.csv", "variant,size_bucket,p50,p99,n", csv)
+    _csv(_csvfile("fig11_ablations.csv", engine),
+         "variant,size_bucket,p50,p99,n", csv)
     return rows
 
 
 # --------------------------------------------------- failover (claim §3.4)
-def failover_bench(scale="default", sequential=False) -> List[Row]:
+def failover_bench(scale="default", sequential=False,
+                   engine="fluid") -> List[Row]:
     """Data-plane fast-failover: completion rate + tail with the 100G/5ms
     long-haul link killed a third into the run (lazy re-hash, zero
     control-plane involvement). Runs via the ``testbed8_failover``
     scenario — both policies share the schedule, so the pair is one
     sweep group."""
+    fig = _tag("failover", engine)
     fail_ms = _DUR[scale] // 3000
     specs = [ExpSpec(topology=f"testbed8_failover:fail_ms={fail_ms}",
-                     load=0.3, policy=pol, duration_us=_DUR[scale])
+                     load=0.3, policy=pol, engine=engine,
+                     duration_us=_DUR[scale])
              for pol in ["lcmp", "ecmp"]]
-    results, per_cell, summary = _sweep("failover", specs, sequential)
+    results, per_cell, summary = _sweep(fig, specs, sequential)
     rows = [summary]
     for res in results:
         st = res.stats
-        rows.append((f"failover/{res.spec.policy}", per_cell,
+        rows.append((f"{fig}/{res.spec.policy}", per_cell,
                      f"completed={st.completed}/{st.offered};"
                      f"p99={st.p99:.2f}"))
     return rows
 
 
 # ------------------------------------------- staleness ablation (§7.3, new)
-def staleness_ablation(scale="default", sequential=False) -> List[Row]:
+def staleness_ablation(scale="default", sequential=False,
+                       engine="fluid") -> List[Row]:
     """[§7.3] Signal-staleness grid on the ``staleness`` scenario (a
     *remote* span of the good route silently degrades): sig_delay_scale
     x ctrl_period_us, with the policy axis dynamic inside each trace.
-    Congestion-reactive policies (lcmp, lcmp_w) worsen as the routed
-    signal ages; oblivious ecmp is exactly flat. Each CSV row also
+    LCMP's tail worsens as the routed signal ages (saturating once it is
+    staler than the queue-buildup timescale; lcmp_w's capacity-weighted
+    hash is noisier at reduced scale); oblivious ecmp is exactly flat.
+    Each CSV row also
     records the degraded route's *installed* C_path at horizon end; the
     ctrl_period_us=0 rows keep the build-time score while every live
     period shows the repriced one — the control-plane refresh
     demonstrably repricing the route, visible in the CSV itself."""
+    fig = _tag("staleness", engine)
     # degrade early (1/5 of the run): the tail must be dominated by flows
     # that lived through the stale-signal window, not by generic load
     deg_ms = max(_DUR[scale] // 5000, 50)
     top = f"staleness:deg_ms={deg_ms}"
-    grid = [(sds, per) for sds in (0.0, 1.0, 4.0)
+    # operating point: 40% load keeps the tail out of horizon saturation
+    # (at 50% the p99 is dominated by horizon-bound stragglers and the
+    # staleness columns go flat — see tests/test_signal_plane.py, which
+    # asserts the hurt at this point); the ladder spans to x6 because
+    # the per-hop backward delay on the degraded span is 25 ms and the
+    # queue-buildup timescale eats the x1 point
+    grid = [(sds, per) for sds in (0.0, 2.0, 6.0)
             for per in (0, 50_000, 200_000)]
-    specs = [ExpSpec(topology=top, load=0.5, policy=pol,
+    specs = [ExpSpec(topology=top, load=0.4, policy=pol, engine=engine,
                      duration_us=_DUR[scale], seed=1,
                      sig_delay_scale=sds, ctrl_period_us=per)
              for sds, per in grid
              for pol in ["ecmp", "lcmp", "lcmp_w"]]
-    results, per_cell, summary = _sweep("staleness", specs, sequential)
+    results, per_cell, summary = _sweep(fig, specs, sequential)
     scen, table = build_world(top)
     deg_link = scen.degrade_sched[0][0]
     deg_path = int(np.nonzero(
@@ -284,20 +338,22 @@ def staleness_ablation(scale="default", sequential=False) -> List[Row]:
         cp = int(res.final.c_path[deg_path])
         csv.append(f"{s.sig_delay_scale:g},{s.ctrl_period_us},{s.policy},"
                    f"{st.p50:.3f},{st.p99:.3f},{cp}")
-        rows.append((f"staleness/sds{s.sig_delay_scale:g}"
+        rows.append((f"{fig}/sds{s.sig_delay_scale:g}"
                      f"/cp{s.ctrl_period_us // 1000}ms/{s.policy}", per_cell,
                      f"p50={st.p50:.2f};p99={st.p99:.2f};cpath_deg={cp}"))
-    _csv("staleness_ablation.csv",
+    _csv(_csvfile("staleness_ablation.csv", engine),
          "sig_delay_scale,ctrl_period_us,policy,p50,p99,cpath_degraded", csv)
     return rows
 
 
 # ------------------------------------------------- scenario showcase (new)
-def scenarios_bench(scale="default", sequential=False) -> List[Row]:
+def scenarios_bench(scale="default", sequential=False,
+                    engine="fluid") -> List[Row]:
     """Beyond-paper scenario regimes from the registry: a segmented
     long-haul mesh (MatchRDMA-style), silent capacity degradation on the
     13-DC backbone, and delay-asymmetry jitter on the testbed."""
-    specs = [ExpSpec(topology=top, load=0.3, policy=pol,
+    fig = _tag("scenarios", engine)
+    specs = [ExpSpec(topology=top, load=0.3, policy=pol, engine=engine,
                      duration_us=_DUR[scale], pairs=pairs,
                      cap_scale=cap_scale)
              for top, pairs, cap_scale in [
@@ -306,15 +362,72 @@ def scenarios_bench(scale="default", sequential=False) -> List[Row]:
                  ("jitter:base=testbed8,frac=0.3", "main", 0.125),
              ]
              for pol in ["lcmp", "ecmp"]]
-    results, per_cell, summary = _sweep("scenarios", specs, sequential)
+    results, per_cell, summary = _sweep(fig, specs, sequential)
     rows, csv = [summary], []
     for res in results:
         s, st = res.spec, res.stats
         name = s.topology.split(":")[0]
         csv.append(f"{name},{s.policy},{st.p50:.3f},{st.p99:.3f},"
                    f"{st.completed}")
-        rows.append((f"scenarios/{name}/{s.policy}", per_cell,
+        rows.append((f"{fig}/{name}/{s.policy}", per_cell,
                      f"p50={st.p50:.2f};p99={st.p99:.2f};"
                      f"completed={st.completed}/{st.offered}"))
-    _csv("scenarios.csv", "scenario,policy,p50,p99,completed", csv)
+    _csv(_csvfile("scenarios.csv", engine), "scenario,policy,p50,p99,completed",
+         csv)
+    return rows
+
+
+# -------------------------------------- cross-engine fidelity (§6, new)
+def fidelity_bench(scale="default", sequential=False,
+                   engine="both") -> List[Row]:
+    """[§6 fidelity] Fluid-vs-packet cross-validation — the reproduction
+    analogue of the paper's testbed-vs-NS-3 correlation (r >= 0.95): the
+    same scenario x policy grid runs on BOTH engines (the ``engine``
+    argument is ignored; this suite is inherently dual) and the CSV
+    records per-policy p50/p99 slowdown for each backend plus the
+    deltas. Derived rows report the cross-engine log-space Pearson
+    correlation over all (cell, percentile) points and whether the
+    paper's headline ordering — LCMP below ECMP — holds under both
+    backends on the clean testbed. Grids: the 8-DC testbed at 30% (the
+    Fig. 5 operating point) and the remote-span ``staleness`` degrade at
+    40% (the regime where the engines' queue models differ most: the
+    fluid engine estimates queue waits analytically, the packet engine
+    makes flows *experience* them)."""
+    del engine
+    deg_ms = max(_DUR[scale] // 5000, 50)
+    cells = [("testbed8", 0.3), (f"staleness:deg_ms={deg_ms}", 0.4)]
+    pols = ["ecmp", "ucmp", "lcmp"]
+    specs = [ExpSpec(topology=top, load=load, policy=pol, engine=eng,
+                     duration_us=_DUR[scale], seed=1)
+             for top, load in cells for pol in pols
+             for eng in ("fluid", "packet")]
+    results, per_cell, summary = _sweep("fidelity", specs, sequential)
+    by = {(r.spec.topology, r.spec.policy, r.spec.engine): r.stats
+          for r in results}
+    rows, csv = [summary], []
+    fl, pk = [], []
+    for top, load in cells:
+        name = top.split(":")[0]
+        for pol in pols:
+            a, b = by[(top, pol, "fluid")], by[(top, pol, "packet")]
+            fl += [a.p50, a.p99]
+            pk += [b.p50, b.p99]
+            csv.append(f"{name},{pol},{a.p50:.3f},{a.p99:.3f},"
+                       f"{b.p50:.3f},{b.p99:.3f},"
+                       f"{b.p50 - a.p50:.3f},{b.p99 - a.p99:.3f}")
+            rows.append((f"fidelity/{name}/{pol}", per_cell,
+                         f"fluid_p50={a.p50:.2f};packet_p50={b.p50:.2f};"
+                         f"fluid_p99={a.p99:.2f};packet_p99={b.p99:.2f}"))
+    r = float(np.corrcoef(np.log(fl), np.log(pk))[0, 1])
+    rows.append(("fidelity/engine-correlation", 0.0, f"pearson_log={r:.3f}"))
+    t8 = {(pol, eng): by[("testbed8", pol, eng)] for pol in pols
+          for eng in ("fluid", "packet")}
+    order_ok = all(t8[("lcmp", eng)].p50 < t8[("ecmp", eng)].p50
+                   and t8[("lcmp", eng)].p99 < t8[("ecmp", eng)].p99
+                   for eng in ("fluid", "packet"))
+    rows.append(("fidelity/lcmp-beats-ecmp-both-engines", 0.0,
+                 f"holds={order_ok}"))
+    _csv("fidelity.csv",
+         "scenario,policy,p50_fluid,p99_fluid,p50_packet,p99_packet,"
+         "dp50,dp99", csv)
     return rows

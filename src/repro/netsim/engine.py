@@ -1,0 +1,729 @@
+"""Shared multi-engine simulation core (the surface both the fluid-rate
+and the packet-level engines consume).
+
+The repo ships two simulation backends behind one interface:
+
+- ``repro.netsim.fluid``  — flow-level fluid-rate approximation (fast;
+  max-min link sharing, analytic queue integration);
+- ``repro.netsim.packet`` — slotted packet-level engine (the NS-3
+  analogue of paper §6: per-hop FIFO byte/packet queues, ECN marking
+  thresholds, PFC pause/resume with backward propagation delay, windowed
+  sources).
+
+Both engines are one jitted ``lax.scan`` over ``SimState`` and share,
+*by construction* (same functions, not parallel implementations):
+
+- ``SimConfig`` / ``SimArrays`` / ``SimState`` — the experiment config,
+  static device arrays, and the dynamic pytree (the packet engine
+  subclasses ``SimState`` with its extra per-hop queue state);
+- ``build()`` — tables, arrival bucketing, failure/degradation schedule
+  folding, signal-delay precomputation, HIST validation;
+- the **signal plane**: the ``core.cong`` register pipeline recorded per
+  step in the ``hist_c`` ring (``monitor_tick``), read back with
+  backward propagation delay (``path_cong_view``);
+- the **control plane**: periodic ``C_path`` re-install from effective
+  capacities (``ctrl_refresh`` / ``ctrl_tick``);
+- **routing**: arrival-time decisions through ``select.select_egress``
+  and the baselines, flow stickiness, and lazy failover
+  (``_route_arrivals`` / ``_reroute_dead``);
+- the **CC rate laws** (``_cc_update``): DCQCN/DCTCP/TIMELY/HPCC-like,
+  reacting to RTT-delayed signals from the ``hist_q``/``hist_u`` rings —
+  the fluid engine uses the rate directly, the packet engine paces
+  packet injection with it and bounds in-flight bytes by the rate-BDP
+  window.
+
+An *engine* is any module satisfying the ``Engine`` protocol below
+(``name`` / ``build`` / ``run_impl`` / ``run``); ``get_engine`` resolves
+the ``SimConfig.engine`` / ``ExpSpec.engine`` string. Final states feed
+``metrics.fct_stats`` unchanged — every scenario, sweep axis, and figure
+grid runs on either backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import cong as congmod
+from repro.core import select as selmod
+from repro.core.cong import CongParams, CongState
+from repro.core.pathq import (PathQParams, calc_path_quality,
+                              path_bottleneck_stats)
+from repro.core.select import SelectParams
+from repro.core.tables import CELL_BYTES, bootstrap_tables
+from repro.netsim.paths import PathTable
+from repro.traffic.gen import FlowSet
+
+HIST = 8192          # history rings (steps); must exceed the max RTT and
+                     # signal-delay offsets — build() validates this
+
+# Policy name -> dense code. "sweep" is a meta-policy: the step function
+# dispatches on the per-experiment ``SimArrays.policy_code`` scalar instead
+# of a Python branch, so a vmapped batch can mix policies in one trace
+# (the sweep engine's whole-grid-single-XLA-computation mode).
+POLICIES = ("lcmp", "lcmp_w", "ecmp", "ucmp", "wcmp", "redte")
+ENGINES = ("fluid", "packet")
+_NEVER = (1 << 30)   # sentinel step for "this link never fails/degrades"
+
+
+def policy_code(policy: str) -> int:
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; valid: {POLICIES}")
+    return POLICIES.index(policy)
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What a simulation backend must provide (modules satisfy this)."""
+    name: str
+
+    def build(self, table: PathTable, flows: FlowSet, cfg: "SimConfig"):
+        """Pack tables + flows -> (SimArrays, SimState-like pytree)."""
+
+    def run_impl(self, arrs: "SimArrays", state, cfg: "SimConfig"):
+        """Unjitted scan body (the sweep engine vmaps this)."""
+
+    def run(self, arrs: "SimArrays", state, cfg: "SimConfig"):
+        """Jitted single-experiment entry point -> final state."""
+
+
+def get_engine(name: str) -> Engine:
+    """Resolve an engine string (``SimConfig.engine``) to its module."""
+    if name == "fluid":
+        from repro.netsim import fluid
+        return fluid
+    if name == "packet":
+        from repro.netsim import packet
+        return packet
+    raise ValueError(f"unknown engine {name!r}; valid: {ENGINES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    engine: str = "fluid"         # fluid|packet (see get_engine)
+    policy: str = "lcmp"          # lcmp|ecmp|ucmp|wcmp|redte|sweep
+    cc: str = "dcqcn"             # dcqcn|dctcp|timely|hpcc
+    dt_us: int = 200
+    horizon_us: int = 2_000_000
+    cap_scale: float = 0.125      # uniform capacity scale (sim speed knob)
+    buffer_bytes: float = 6e9     # long-haul switch buffer (paper §6.2)
+    ecn_kmin_bytes: float = 4e5   # ECN mark threshold Kmin (scaled caps)
+    ecn_kmax_factor: float = 10.0  # Kmax = factor * Kmin (RED ramp top)
+    ai_frac: float = 0.002        # additive increase per step, frac of line
+    md_factor: float = 0.7        # multiplicative decrease
+    # MD reaction timer (us): real DCQCN/TIMELY decrease on a NIC timer,
+    # not once per RTT — on a 250 ms long-haul path a per-RTT gate would
+    # leave flows effectively uncontrolled. Feedback *delay* stays RTT.
+    cc_dec_period_us: int = 1_600
+    redte_period_us: int = 100_000
+    # routing-signal staleness: each hop's C_cong reaches the ingress
+    # after scale x its one-way propagation distance back (1.0 = physics;
+    # 0.0 = oracle visibility; >1 models slower telemetry channels)
+    sig_delay_scale: float = 1.0
+    # control-plane C_path re-install period (paper §7.3); 0 = never
+    # refresh (the build-time static table)
+    ctrl_period_us: int = 100_000
+    # ---- packet-engine knobs (ignored by the fluid engine) ----
+    mtu_bytes: int = 1024         # packet size; == CELL_BYTES so queue
+                                  # depth in packets == monitor cells
+    # PFC pause/resume hysteresis as fractions of the (scaled) buffer:
+    # XOFF fires above, XON releases below. The pause frame reaches the
+    # upstream transmitter one backward link propagation late, so queues
+    # overshoot XOFF by up to rate x delay — the long-haul headroom
+    # problem the paper's 6 GB buffers exist for.
+    pfc_xoff_frac: float = 0.7
+    pfc_xon_frac: float = 0.5
+    select: SelectParams = SelectParams()
+    pathq: PathQParams = PathQParams()
+    congp: CongParams = CongParams()
+    # optional single-link failure injection (legacy single-event form;
+    # folded into the schedule arrays at build time)
+    fail_link: int = -1
+    fail_at_us: int = -1
+    # scenario schedules (hashable static tuples, see netsim.scenarios):
+    # fail_sched    = ((link_idx, at_us), ...)          hard link trips
+    # degrade_sched = ((link_idx, at_us, factor), ...)  silent capacity loss
+    fail_sched: tuple = ()
+    degrade_sched: tuple = ()
+    # policy=="sweep" only: the policies the dynamic dispatch must cover.
+    # The sweep engine narrows this to the ones actually present in a
+    # batch so un-swept policies cost nothing per step.
+    sweep_policies: tuple = POLICIES
+
+    @property
+    def num_steps(self) -> int:
+        return self.horizon_us // self.dt_us
+
+    @property
+    def has_failures(self) -> bool:
+        return self.fail_link >= 0 or len(self.fail_sched) > 0
+
+    @property
+    def has_degrade(self) -> bool:
+        return len(self.degrade_sched) > 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    # per flow
+    flow_path: jnp.ndarray     # (F,) i32, -1 until routed
+    remaining: jnp.ndarray     # (F,) f32 bytes
+    rate: jnp.ndarray          # (F,) f32 bytes/us
+    active: jnp.ndarray        # (F,) bool
+    done: jnp.ndarray          # (F,) bool
+    fct_us: jnp.ndarray        # (F,) f32
+    extra_wait: jnp.ndarray    # (F,) f32 queue-wait component
+    rtt_steps: jnp.ndarray     # (F,) i32
+    route_step: jnp.ndarray    # (F,) i32 step the flow was (re)routed at
+    last_dec: jnp.ndarray      # (F,) i32 step of last MD
+    cc_alpha: jnp.ndarray      # (F,) f32 (DCTCP EWMA)
+    cc_target: jnp.ndarray     # (F,) f32 (DCQCN target rate / fast recovery)
+    prev_delay: jnp.ndarray    # (F,) f32 (TIMELY gradient)
+    # per link
+    q_bytes: jnp.ndarray       # (L,) f32
+    hist_q: jnp.ndarray        # (L, HIST) f32 queue bytes
+    hist_u: jnp.ndarray        # (L, HIST) f32 utilization
+    hist_c: jnp.ndarray        # (L, HIST) i32 quantized C_cong per step
+    u_ewma: jnp.ndarray        # (L,) f32
+    link_alive: jnp.ndarray    # (L,) bool
+    serv_bytes: jnp.ndarray    # (L,) f32 served-byte counter (metrics)
+    cong: CongState            # LCMP per-link registers
+    c_cong: jnp.ndarray        # (L,) i32 current LCMP congestion score
+    # control-plane installed path scores — *state*, periodically
+    # re-installed from effective capacities (see ``ctrl_refresh``)
+    c_path: jnp.ndarray        # (NP,) i32
+    redte_w: jnp.ndarray       # (NPAIR, K) i32 split weights
+
+
+# SimState fields with a leading per-flow axis — the sweep engine pads
+# and stacks exactly these when batching cells (the rest is per-link/
+# per-pair and shape-shared across a group). Packet-engine extras are
+# appended here so one list covers both state types; fields absent from
+# a given state dataclass are simply never looked up.
+FLOW_FIELDS = ("flow_path", "remaining", "rate", "active", "done", "fct_us",
+               "extra_wait", "rtt_steps", "route_step", "last_dec",
+               "cc_alpha", "cc_target", "prev_delay",
+               # packet engine (see packet.PacketState)
+               "fq", "credit", "delivered")
+# per-flow field -> inert pad value (mirrors build()'s init state)
+STATE_PAD = {"flow_path": -1, "route_step": 1 << 20,
+             "last_dec": -(1 << 20), "rtt_steps": 1}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimArrays:
+    """Static (non-scanned) device arrays."""
+    link_cap: jnp.ndarray      # (L,) f32 bytes/us (scaled)
+    link_cap_gbps: jnp.ndarray # (L,) i32 (unscaled, for tables)
+    path_links: jnp.ndarray    # (NP, H) i32
+    path_prop: jnp.ndarray     # (NP,) i32 us
+    path_cap: jnp.ndarray      # (NP,) f32 bytes/us (scaled bottleneck)
+    path_cap_gbps: jnp.ndarray # (NP,) i32
+    path_first: jnp.ndarray    # (NP,) i32
+    pair_cand: jnp.ndarray     # (NPAIR, K) i32
+    arrivals: jnp.ndarray      # (T, A) i32 flow idx, -1 pad
+    f_arr_us: jnp.ndarray      # (F,) f32
+    f_size: jnp.ndarray        # (F,) f32
+    f_pair: jnp.ndarray        # (F,) i32
+    f_id: jnp.ndarray          # (F,) u32
+    # () i32 — read only when cfg.policy=="sweep"
+    policy_code: jnp.ndarray = None
+    link_fail_step: jnp.ndarray = None    # (L,) i32 trip step (_NEVER)
+    link_deg_step: jnp.ndarray = None     # (L,) i32 degradation onset step
+    link_deg_factor: jnp.ndarray = None   # (L,) f32 cap multiplier after onset
+    path_len: jnp.ndarray = None          # (NP,) i32 valid hop count
+    link_delay_us: jnp.ndarray = None     # (L,) i32 one-way propagation
+    # (NP, H) i32 — steps each hop's congestion signal takes to propagate
+    # back to the ingress (cumulative upstream one-way delay, scaled by
+    # cfg.sig_delay_scale); hop 0 is the ingress's own egress port (0)
+    path_sig_delay: jnp.ndarray = None
+    tables: object = None      # SwitchTables
+
+
+def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
+    """Pack numpy tables + flows into device arrays and init state.
+
+    Engine-agnostic: returns the base ``SimState``; the packet engine
+    wraps it with its extra per-hop queue fields (``packet.build``).
+    """
+    # links
+    from repro.netsim.topo import Topology  # noqa: F401 (doc only)
+    link_cap_gbps = _infer_link_caps(table)
+    L = len(link_cap_gbps)
+    link_cap = jnp.asarray(link_cap_gbps * 125.0 * cfg.cap_scale, jnp.float32)
+
+    # the whole simulated world is capacity-scaled, so the switch tables
+    # (trend normalization = cells per interval at line rate) and buffers
+    # scale identically — timescales are then invariant under cap_scale.
+    tb = bootstrap_tables([max(int(c * cfg.cap_scale), 1) for c in link_cap_gbps],
+                          buffer_bytes=max(int(cfg.buffer_bytes * cfg.cap_scale),
+                                           1 << 20),
+                          sample_interval_us=cfg.dt_us)
+    c_path = calc_path_quality(jnp.asarray(table.path_prop_us),
+                               jnp.asarray(table.path_cap),
+                               tb.cap_thresh, cfg.pathq)
+
+    # per-path per-hop signal-propagation offsets: hop h's congestion
+    # score travels back over hops 0..h-1, so the ingress sees it
+    # sum(delay[0..h-1]) late (x sig_delay_scale)
+    link_delay_us = _infer_link_delays(table)
+    pl = np.asarray(table.path_links)
+    hop_delay = np.where(pl >= 0, link_delay_us[np.maximum(pl, 0)], 0)
+    upstream = np.concatenate([np.zeros((pl.shape[0], 1), np.int64),
+                               np.cumsum(hop_delay, -1)[:, :-1]], axis=1)
+    sig_delay_f = cfg.sig_delay_scale * upstream / cfg.dt_us
+    sig_delay = sig_delay_f.astype(np.int32)
+
+    # the history rings silently alias once a read offset wraps: a
+    # "delayed" read would return recent/future data. Guard both readers
+    # (on the pre-cast floats — an int32-wrapped offset must not pass).
+    max_rtt = int(np.max(2 * np.asarray(table.path_prop_us) // cfg.dt_us,
+                         initial=1))
+    max_sig = int(sig_delay_f.max(initial=0))
+    if max(max_rtt, max_sig) >= HIST:
+        raise ValueError(
+            f"history ring too short: HIST={HIST} steps but the worst path "
+            f"needs rtt={max_rtt} and signal-delay={max_sig} steps at "
+            f"dt_us={cfg.dt_us} (sig_delay_scale={cfg.sig_delay_scale}); "
+            "increase dt_us or reduce sig_delay_scale")
+
+    # arrivals bucketed by step
+    T = cfg.num_steps
+    step = np.minimum(flows.arrival_us // cfg.dt_us, T - 1).astype(np.int64)
+    counts = np.bincount(step, minlength=T)
+    A = max(int(counts.max()), 1)
+    arrivals = np.full((T, A), -1, np.int32)
+    slot = np.zeros(T, np.int64)
+    for i, s in enumerate(step):
+        arrivals[s, slot[s]] = i
+        slot[s] += 1
+
+    # failure / degradation schedules -> per-link step arrays (the legacy
+    # single-event fields fold into the same representation)
+    fail_step = np.full(L, _NEVER, np.int32)
+    if cfg.fail_link >= 0:
+        fail_step[cfg.fail_link] = cfg.fail_at_us // cfg.dt_us
+    for li, at_us in cfg.fail_sched:
+        fail_step[li] = min(int(fail_step[li]), int(at_us) // cfg.dt_us)
+    deg_step = np.full(L, _NEVER, np.int32)
+    deg_factor = np.ones(L, np.float32)
+    for li, at_us, fac in cfg.degrade_sched:
+        deg_step[li] = int(at_us) // cfg.dt_us
+        deg_factor[li] = float(fac)
+
+    arr = SimArrays(
+        link_cap=link_cap,
+        link_cap_gbps=jnp.asarray(link_cap_gbps, jnp.int32),
+        path_links=jnp.asarray(table.path_links),
+        path_prop=jnp.asarray(table.path_prop_us),
+        path_cap=jnp.asarray(table.path_cap * 125.0 * cfg.cap_scale, jnp.float32),
+        path_cap_gbps=jnp.asarray(table.path_cap),
+        path_first=jnp.asarray(table.path_first),
+        pair_cand=jnp.asarray(table.pair_cand),
+        arrivals=jnp.asarray(arrivals),
+        f_arr_us=jnp.asarray(flows.arrival_us, jnp.float32),
+        f_size=jnp.asarray(flows.size_bytes, jnp.float32),
+        f_pair=jnp.asarray(flows.pair_id),
+        f_id=jnp.asarray(flows.flow_id),
+        policy_code=jnp.int32(policy_code(cfg.policy)
+                              if cfg.policy != "sweep" else 0),
+        link_fail_step=jnp.asarray(fail_step),
+        link_deg_step=jnp.asarray(deg_step),
+        link_deg_factor=jnp.asarray(deg_factor),
+        path_len=jnp.asarray(table.path_len),
+        link_delay_us=jnp.asarray(link_delay_us, jnp.int32),
+        path_sig_delay=jnp.asarray(sig_delay),
+        tables=tb,
+    )
+    F = flows.num_flows
+    NPAIR, K = table.pair_cand.shape
+    state = SimState(
+        flow_path=jnp.full((F,), -1, jnp.int32),
+        remaining=jnp.zeros((F,), jnp.float32),
+        rate=jnp.zeros((F,), jnp.float32),
+        active=jnp.zeros((F,), bool),
+        done=jnp.zeros((F,), bool),
+        fct_us=jnp.zeros((F,), jnp.float32),
+        extra_wait=jnp.zeros((F,), jnp.float32),
+        rtt_steps=jnp.ones((F,), jnp.int32),
+        route_step=jnp.full((F,), 1 << 20, jnp.int32),   # sentinel: unrouted
+        last_dec=jnp.full((F,), -(1 << 20), jnp.int32),
+        cc_alpha=jnp.zeros((F,), jnp.float32),
+        cc_target=jnp.zeros((F,), jnp.float32),
+        prev_delay=jnp.zeros((F,), jnp.float32),
+        q_bytes=jnp.zeros((L,), jnp.float32),
+        hist_q=jnp.zeros((L, HIST), jnp.float32),
+        hist_u=jnp.zeros((L, HIST), jnp.float32),
+        hist_c=jnp.zeros((L, HIST), jnp.int32),
+        u_ewma=jnp.zeros((L,), jnp.float32),
+        link_alive=jnp.ones((L,), bool),
+        serv_bytes=jnp.zeros((L,), jnp.float32),
+        cong=CongState.init(L),
+        c_cong=jnp.zeros((L,), jnp.int32),
+        c_path=c_path,
+        redte_w=jnp.ones((NPAIR, K), jnp.int32),
+    )
+    return arr, state
+
+
+def _infer_link_caps(table: PathTable) -> np.ndarray:
+    """Recover per-link capacities from path hop data (bottleneck-safe:
+    every link appears in some path with its true cap recorded at build
+    time via topo arrays — we stash them on the table)."""
+    if hasattr(table, "_link_caps"):
+        return table._link_caps  # set by attach_link_caps
+    raise ValueError("call attach_link_caps(table, topo) before build()")
+
+
+def _infer_link_delays(table: PathTable) -> np.ndarray:
+    if hasattr(table, "_link_delays"):
+        return table._link_delays  # set by attach_link_caps
+    raise ValueError("call attach_link_caps(table, topo) before build()")
+
+
+def attach_link_caps(table: PathTable, topo) -> PathTable:
+    _, _, cap, dly = topo.arrays()
+    object.__setattr__(table, "_link_caps", cap.astype(np.float32))
+    object.__setattr__(table, "_link_delays", dly.astype(np.int64))
+    return table
+
+
+# ---------------------------------------------------------- shared step parts
+def path_cong_view(hist_c: jnp.ndarray, path_links: jnp.ndarray,
+                   sig_delay: jnp.ndarray, t) -> jnp.ndarray:
+    """Ingress-visible congestion of candidate paths at step ``t``.
+
+    The max over hops of each hop's *quantized* ``C_cong`` (the
+    ``core.cong`` register-pipeline output recorded in the ``hist_c``
+    ring), read ``sig_delay`` steps late — the one-way propagation
+    distance the signal travels back to the ingress. A remote hop's
+    congestion can never be seen earlier than physics delivers it.
+
+    ``path_links``/``sig_delay``: (..., H) hop link indices (-1 pad) and
+    per-hop delay offsets; returns (...,) int32 scores.
+    """
+    lidx = jnp.maximum(path_links, 0)
+    slot = jnp.asarray((t - sig_delay) % HIST, jnp.int32)
+    v = hist_c.reshape(-1)[lidx * HIST + slot]
+    return jnp.where(path_links >= 0, v, 0).max(-1)
+
+
+def ctrl_refresh(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> jnp.ndarray:
+    """One control-plane tick (paper §3.2 install, §7.3 update period):
+    recompute the C_path table from *effective* per-link capacities — the
+    degrade schedule and link liveness applied — via the shared
+    ``core.pathq`` helpers. Propagation delays are physical and static;
+    only the capacity term can change at runtime."""
+    eff = ar.link_cap_gbps * jnp.where(t >= ar.link_deg_step,
+                                       ar.link_deg_factor, 1.0)
+    eff = jnp.where(st.link_alive, eff, 0.0).astype(jnp.int32)
+    _, cap_eff = path_bottleneck_stats(ar.link_delay_us, eff,
+                                       ar.path_links, ar.path_len)
+    return calc_path_quality(ar.path_prop, cap_eff,
+                             ar.tables.cap_thresh, cfg.pathq)
+
+
+def monitor_tick(t, st, ar: SimArrays, cfg: SimConfig):
+    """Switch monitor pass (every dt — the paper's "modest cadence"):
+    run the ``core.cong`` register pipeline on current queue depths and
+    land the quantized score in the ``hist_c`` ring at slot ``t``, where
+    ingress decisions read it back hop-by-hop with propagation delay.
+    Identical for both engines — only the queue dynamics feeding
+    ``st.q_bytes`` differ."""
+    qcells = (st.q_bytes / CELL_BYTES).astype(jnp.int32)
+    cong = congmod.monitor_update(st.cong, qcells, t * cfg.dt_us,
+                                  ar.tables, cfg.congp)
+    c_cong = congmod.calc_cong_cost(cong, ar.tables, cfg.congp)
+    return dataclasses.replace(
+        st, cong=cong, c_cong=c_cong,
+        hist_c=st.hist_c.at[:, jnp.asarray(t % HIST, jnp.int32)].set(c_cong))
+
+
+def ctrl_tick(t, st, ar: SimArrays, cfg: SimConfig):
+    """Periodic control-plane C_path re-install (``ctrl_refresh`` every
+    ``ctrl_period_us``). Skipped entirely when no schedule can change the
+    effective capacities (the refresh would be a no-op) or when the
+    period is 0 (frozen build-time table)."""
+    if cfg.ctrl_period_us > 0 and (cfg.has_failures or cfg.has_degrade):
+        period = max(cfg.ctrl_period_us // cfg.dt_us, 1)
+        st = dataclasses.replace(
+            st, c_path=jnp.where((t % period) == 0,
+                                 ctrl_refresh(t, st, ar, cfg), st.c_path))
+    return st
+
+
+def redte_tick(t, st, ar: SimArrays, cfg: SimConfig):
+    """RedTE periodic split-ratio re-optimization (100 ms loop). In sweep
+    mode the weights are maintained unconditionally (cheap (NPAIR,K)
+    integer ops) — only redte-coded cells ever read them."""
+    if cfg.policy == "redte" or (cfg.policy == "sweep"
+                                 and "redte" in cfg.sweep_policies):
+        period = max(cfg.redte_period_us // cfg.dt_us, 1)
+        due = (t % period) == 0
+        util_q8 = jnp.clip(st.u_ewma * 256, 0, 255).astype(jnp.int32)
+        first = ar.path_first[jnp.maximum(ar.pair_cand, 0)]
+        head = jnp.maximum(256 - util_q8[first], 1)
+        w = jnp.where(ar.pair_cand >= 0, head, 0).astype(jnp.int32)
+        st = dataclasses.replace(
+            st, redte_w=jnp.where(due, w, st.redte_w))
+    return st
+
+
+def _path_queue_wait(st: SimState, ar: SimArrays, path_idx) -> jnp.ndarray:
+    """Standing-queue wait a path's first packets see: sum over hops of
+    queue bytes / link capacity. ``path_idx`` must be pre-clamped >= 0."""
+    hop = ar.path_links[path_idx]
+    return jnp.where(hop >= 0, st.q_bytes[jnp.maximum(hop, 0)]
+                     / ar.link_cap[jnp.maximum(hop, 0)], 0.0).sum(-1)
+
+
+def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
+    """Decide paths for the batch of flows arriving this step."""
+    idx = ar.arrivals[t]                        # (A,)
+    is_flow = idx >= 0
+    fidx = jnp.maximum(idx, 0)
+    pair = ar.f_pair[fidx]                      # (A,)
+    cand = ar.pair_cand[pair]                   # (A, K)
+    cand_ok = cand >= 0
+    cpad = jnp.maximum(cand, 0)
+
+    # candidate liveness: every hop of the path must be alive
+    hop = ar.path_links[cpad]                                   # (A,K,H)
+    hop_alive = jnp.where(hop >= 0, st.link_alive[jnp.maximum(hop, 0)], True)
+    alive = hop_alive.all(-1)
+    valid = cand_ok & alive
+
+    fid = ar.f_id[fidx]
+    c_path = st.c_path[cpad]
+    c_cong = path_cong_view(st.hist_c, hop, ar.path_sig_delay[cpad], t)
+    delay = ar.path_prop[cpad]
+    capg = ar.path_cap_gbps[cpad]
+
+    def _choice(policy: str) -> jnp.ndarray:
+        if policy == "lcmp":
+            return selmod.select_egress(fid, c_path, c_cong, valid,
+                                        cfg.select)[0]
+        if policy == "lcmp_w":  # beyond-paper: capacity-weighted stage 2
+            return selmod.select_egress(fid, c_path, c_cong, valid,
+                                        cfg.select, weights=capg)[0]
+        if policy == "ecmp":
+            return bl.ecmp(fid, delay, capg, valid)
+        if policy == "ucmp":
+            return bl.ucmp(fid, delay, capg, valid)
+        if policy == "wcmp":
+            return bl.wcmp(fid, delay, capg, valid)
+        if policy == "redte":
+            return bl._weighted_hash(fid, st.redte_w[pair], valid)
+        raise ValueError(policy)
+
+    if cfg.policy == "sweep":
+        # dynamic dispatch on the per-experiment code: every *swept*
+        # policy's decision is computed (m<=8 candidates — cheap relative
+        # to the per-flow state updates) and the cell's one is gathered,
+        # so a vmapped batch can mix policies inside a single trace.
+        codes = jnp.asarray([policy_code(p) for p in cfg.sweep_policies],
+                            jnp.int32)
+        k_all = jnp.stack([_choice(p) for p in cfg.sweep_policies])
+        k_idx = jnp.take(k_all, jnp.argmax(codes == ar.policy_code), axis=0)
+    else:
+        k_idx = _choice(cfg.policy)
+
+    chosen = jnp.take_along_axis(cand, jnp.maximum(k_idx, 0)[:, None],
+                                 axis=1)[:, 0]
+    chosen = jnp.where((k_idx >= 0) & is_flow, chosen, -1)      # (A,)
+
+    ok = chosen >= 0
+    cpath_sel = jnp.maximum(chosen, 0)
+    # queue wait seen by the first packets (standing queues on the path)
+    qw = _path_queue_wait(st, ar, cpath_sel)
+
+    rtt = jnp.maximum(2 * ar.path_prop[cpath_sel] // cfg.dt_us, 1)
+
+    F = st.flow_path.shape[0]
+
+    def upd(a, vals, where_ok):
+        # pad slots / no-decision flows scatter out of bounds and drop:
+        # writing a[fidx=0] for pads would race a real flow-0 arrival in
+        # the same batch and make results depend on the pad width (which
+        # the sweep engine varies when stacking cells).
+        return a.at[jnp.where(where_ok, fidx, F)].set(vals, mode="drop")
+
+    st = dataclasses.replace(
+        st,
+        flow_path=upd(st.flow_path, chosen, ok),
+        remaining=upd(st.remaining, ar.f_size[fidx], ok),
+        rate=upd(st.rate, ar.path_cap[cpath_sel], ok),
+        cc_target=upd(st.cc_target, ar.path_cap[cpath_sel], ok),
+        active=upd(st.active, ok, ok),
+        extra_wait=upd(st.extra_wait, qw, ok),
+        rtt_steps=upd(st.rtt_steps, rtt.astype(jnp.int32), ok),
+        route_step=upd(st.route_step,
+                       jnp.full(fidx.shape, 0, jnp.int32) + t, ok),
+    )
+    return st
+
+
+def _cc_update(t, st: SimState, ar: SimArrays, cfg: SimConfig,
+               path_of_flow, links_f, links_ok):
+    """Rate laws reacting to RTT-delayed per-path congestion signals.
+
+    Realism notes (these interact with the routing signal, see DESIGN):
+    - ECN marking is RED-style probabilistic between Kmin and Kmax, so the
+      equilibrium queue *grows with the number of backlogged flows* — a
+      CC that pinned queues at Kmin regardless of load would blind the
+      switch's Q estimator (and real DCQCN does not).
+    - DCQCN-style decrease/recovery: MD cuts both rate and target; the
+      increase phase fast-recovers halfway to target per RTT and only
+      probes (+AI on target) once recovered. Without a target bound, N
+      backlogged flows each AI-ing a line-rate fraction diverge.
+
+    Both engines call this verbatim: the fluid engine applies ``rate``
+    directly as the sending rate; the packet engine paces injection with
+    it and bounds in-flight bytes by the rate-BDP window — the "per-flow
+    windows driven by the same CC laws" contract.
+    """
+    slot = jnp.asarray((t - st.rtt_steps) % HIST, jnp.int32)
+    # Feedback exists only once the flow's own first packets have had a
+    # full RTT on its *current* path: gate on steps since the flow's
+    # routing step, not the global clock — otherwise a flow arriving at
+    # t >> RTT immediately reads congestion history recorded *before* it
+    # was routed (stale signals from traffic it never shared a path with).
+    have_fb = (t - st.route_step) > st.rtt_steps
+    lidx = jnp.maximum(links_f, 0)                              # (F,H)
+    flat = lidx * HIST + slot[:, None]
+    q_sig = jnp.where(links_ok, st.hist_q.reshape(-1)[flat], 0.0).max(-1)
+    u_sig = jnp.where(links_ok, st.hist_u.reshape(-1)[flat], 0.0).max(-1)
+    q_sig = jnp.where(have_fb, q_sig, 0.0)
+    u_sig = jnp.where(have_fb, u_sig, 0.0)
+
+    line = ar.path_cap[jnp.maximum(path_of_flow, 0)]
+    # the CC control loop operates per RTT; discretize increments per step
+    inv_rtt = 1.0 / st.rtt_steps.astype(jnp.float32)
+    ai = cfg.ai_frac * line * inv_rtt          # ai_frac = per-RTT probe frac
+    # MD cadence: a reaction timer, never slower than one per RTT and
+    # never faster than ~8 decreases per feedback epoch (the rtt//8
+    # floor bounds how often a flow can cut on the *same* stale signal)
+    dec_gap = jnp.minimum(
+        st.rtt_steps,
+        jnp.maximum(max(cfg.cc_dec_period_us // cfg.dt_us, 1),
+                    st.rtt_steps // 8))
+    can_dec = (t - st.last_dec) >= dec_gap
+
+    # RED-style marking probability from the delayed queue signal
+    kmin = cfg.ecn_kmin_bytes * cfg.cap_scale
+    kmax = cfg.ecn_kmax_factor * kmin
+    p_mark = jnp.clip((q_sig - kmin) / (kmax - kmin), 0.0, 1.0)
+    u01 = (selmod.fmix32(ar.f_id ^ jnp.uint32(t)).astype(jnp.float32)
+           * (1.0 / 4294967296.0))
+    marked = u01 < p_mark
+
+    target = jnp.maximum(st.cc_target, 0.05 * line)
+
+    def aimd(dec_event, md_rate):
+        """Shared DCQCN-shaped decrease/fast-recovery/probe machinery.
+        Recovery moves halfway to target per *RTT* (not per step) and the
+        target probes +ai_frac of line per RTT once recovered."""
+        dec = dec_event & can_dec
+        new_target = jnp.where(dec, st.rate, target)
+        recover = st.rate + (new_target - st.rate) * 0.5 * inv_rtt
+        probe = jnp.where(st.rate >= 0.95 * new_target, ai, 0.0)
+        rate = jnp.where(dec, st.rate * md_rate, recover + probe)
+        new_target = jnp.where(dec, new_target, new_target + probe)
+        return rate, new_target, dec
+
+    if cfg.cc == "dcqcn":
+        rate, new_target, dec = aimd(marked, cfg.md_factor)
+        alpha, pdel = st.cc_alpha, st.prev_delay
+    elif cfg.cc == "dctcp":
+        alpha = st.cc_alpha * (1 - 1 / 16) + marked.astype(jnp.float32) / 16
+        rate, new_target, dec = aimd(marked, 1.0 - alpha / 2)
+        pdel = st.prev_delay
+    elif cfg.cc == "timely":
+        lcap = ar.link_cap[lidx]
+        d_us = jnp.where(links_ok, st.hist_q.reshape(-1)[flat] / lcap, 0.0).max(-1)
+        d_us = jnp.where(have_fb, d_us, 0.0)
+        grad = d_us - st.prev_delay
+        t_high = 2.0 * kmin / line
+        rate, new_target, dec = aimd(((d_us > t_high) | (grad > 0)) & (d_us > 0),
+                                     cfg.md_factor)
+        alpha, pdel = st.cc_alpha, d_us
+    elif cfg.cc == "hpcc":
+        eta = 0.95
+        bdp = line * jnp.maximum(st.rtt_steps.astype(jnp.float32) * cfg.dt_us, 1.0)
+        u_tot = u_sig + q_sig / jnp.maximum(bdp, 1.0)   # inflight-based U
+        corr = jnp.clip(eta / jnp.maximum(u_tot, 1e-3), 0.3, 1.0)
+        rate, new_target, dec = aimd(u_tot > eta, 1.0)  # md via corr below
+        rate = jnp.where(dec, st.rate * corr, rate)
+        alpha, pdel = st.cc_alpha, st.prev_delay
+    else:
+        raise ValueError(cfg.cc)
+
+    rate = jnp.clip(rate, 0.001 * line, line)
+    new_target = jnp.clip(new_target, 0.001 * line, line)
+    last_dec = jnp.where(dec, jnp.int32(t), st.last_dec)
+    act = st.active
+    return dataclasses.replace(
+        st, rate=jnp.where(act, rate, st.rate),
+        cc_target=jnp.where(act, new_target, st.cc_target),
+        cc_alpha=alpha, prev_delay=pdel,
+        last_dec=jnp.where(act, last_dec, st.last_dec))
+
+
+def _reroute_dead(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> SimState:
+    """Re-decide every active flow whose pinned path lost a link (the
+    data-plane lazy-failover semantics, vectorized over all flows once at
+    the trip step)."""
+    hop = ar.path_links[jnp.maximum(st.flow_path, 0)]
+    dead = jnp.where(hop >= 0, ~st.link_alive[jnp.maximum(hop, 0)], False).any(-1)
+    move = st.active & dead & (st.flow_path >= 0)
+
+    pair = ar.f_pair
+    cand = ar.pair_cand[pair]                                   # (F,K)
+    cpad = jnp.maximum(cand, 0)
+    h = ar.path_links[cpad]
+    h_alive = jnp.where(h >= 0, st.link_alive[jnp.maximum(h, 0)], True).all(-1)
+    valid = (cand >= 0) & h_alive
+    c_path = st.c_path[cpad]
+    # the reroute runs before this step's monitor tick, so slot t is not
+    # yet written: the freshest signal physics offers here is step t-1
+    c_cong = path_cong_view(st.hist_c, h, ar.path_sig_delay[cpad], t - 1)
+    lcmp_k = lambda: selmod.select_egress(ar.f_id, c_path, c_cong, valid,
+                                          cfg.select)[0]
+    ecmp_k = lambda: bl.ecmp(ar.f_id, ar.path_prop[cpad],
+                             ar.path_cap_gbps[cpad], valid)
+    if cfg.policy == "lcmp":
+        k_idx = lcmp_k()
+    elif cfg.policy == "sweep" and "lcmp" in cfg.sweep_policies:
+        # same semantics per cell: lcmp re-decides, baselines re-hash
+        k_idx = jnp.where(ar.policy_code == POLICIES.index("lcmp"),
+                          lcmp_k(), ecmp_k())
+    else:  # baselines re-hash uniformly on failure
+        k_idx = ecmp_k()
+    new_path = jnp.take_along_axis(cand, jnp.maximum(k_idx, 0)[:, None],
+                                   axis=1)[:, 0]
+    ok = move & (k_idx >= 0)
+    npad = jnp.maximum(new_path, 0)
+    # CC state re-initializes with the path: a rerouted flow is "first
+    # packets" again — target line rate of the NEW path, a fresh MD
+    # timer, and the new path's standing-queue wait (not the dead one's)
+    qw = _path_queue_wait(st, ar, npad)
+    return dataclasses.replace(
+        st,
+        flow_path=jnp.where(ok, new_path, st.flow_path),
+        rate=jnp.where(ok, ar.path_cap[npad], st.rate),
+        cc_target=jnp.where(ok, ar.path_cap[npad], st.cc_target),
+        last_dec=jnp.where(ok, jnp.int32(-(1 << 20)), st.last_dec),
+        cc_alpha=jnp.where(ok, 0.0, st.cc_alpha),
+        prev_delay=jnp.where(ok, 0.0, st.prev_delay),
+        extra_wait=jnp.where(ok, qw, st.extra_wait),
+        rtt_steps=jnp.where(
+            ok, jnp.maximum(2 * ar.path_prop[npad]
+                            // cfg.dt_us, 1).astype(jnp.int32), st.rtt_steps),
+        route_step=jnp.where(ok, jnp.int32(0) + t, st.route_step),
+        active=jnp.where(move & (k_idx < 0), False, st.active))

@@ -3,10 +3,12 @@
 This is the unit the benchmark harness (one per paper figure) composes.
 ``ExpSpec.topology`` accepts any registered scenario string (see
 ``repro.netsim.scenarios``), including parameterized ones like
-``"longhaul_mesh:routes=8,segs=3"``. The helpers are factored so the
-batched sweep engine (``repro.netsim.sweep``) can share the cached
-world-building and flow-generation steps while replacing the one-cell
-``fluid.run`` with a single vmapped invocation.
+``"longhaul_mesh:routes=8,segs=3"``. ``ExpSpec.engine`` selects the
+simulation backend (``"fluid"`` or ``"packet"``, see
+``repro.netsim.engine``) — every scenario/axis runs on either. The
+helpers are factored so the batched sweep engine (``repro.netsim.sweep``)
+can share the cached world-building and flow-generation steps while
+replacing the one-cell ``run`` with a single vmapped invocation.
 """
 from __future__ import annotations
 
@@ -16,8 +18,9 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
+from repro.netsim import engine as enginemod
 from repro.netsim import fluid, metrics, paths, scenarios
-from repro.netsim.fluid import SimConfig
+from repro.netsim.engine import SimConfig
 from repro.traffic import cdf as cdfmod
 from repro.traffic.gen import generate
 
@@ -29,6 +32,7 @@ class ExpSpec:
     load: float = 0.3
     policy: str = "lcmp"
     cc: str = "dcqcn"
+    engine: str = "fluid"            # fluid | packet (engine.ENGINES)
     duration_us: int = 1_500_000
     seed: int = 0
     pairs: str = "main"              # main | all | <src>-<dst>
@@ -84,7 +88,7 @@ def spec_to_cfg(spec: ExpSpec, scen: scenarios.Scenario) -> SimConfig:
         kw["pathq"] = spec.pathq
     if spec.congp is not None:
         kw["congp"] = spec.congp
-    return SimConfig(policy=spec.policy, cc=spec.cc,
+    return SimConfig(engine=spec.engine, policy=spec.policy, cc=spec.cc,
                      horizon_us=spec.duration_us * 2,  # let tail flows finish
                      cap_scale=spec.cap_scale,
                      sig_delay_scale=spec.sig_delay_scale,
@@ -101,8 +105,9 @@ def build_experiment(spec: ExpSpec):
 
 def run_experiment(spec: ExpSpec):
     t, table, flows, cfg = build_experiment(spec)
-    arrs, state = fluid.build(table, flows, cfg)
-    final = fluid.run(arrs, state, cfg)
+    eng = enginemod.get_engine(cfg.engine)
+    arrs, state = eng.build(table, flows, cfg)
+    final = eng.run(arrs, state, cfg)
     stats = metrics.fct_stats(final, table, flows, cfg)
     util = metrics.link_utilization(final, arrs, cfg)
     return stats, util, (t, table, flows, cfg, final)

@@ -12,7 +12,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.netsim.fluid import SimArrays, SimConfig, SimState
+from repro.netsim.engine import SimArrays, SimConfig, SimState
 from repro.netsim.paths import PathTable
 from repro.traffic.gen import FlowSet
 

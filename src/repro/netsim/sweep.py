@@ -6,7 +6,8 @@ policies x seeds (§6, Figs. 5-11). Running each ``ExpSpec`` through
 every cell. This engine instead:
 
 1. groups cells by their *static* key — everything that changes the
-   traced program: scenario string (topology + schedules), cc law,
+   traced program: scenario string (topology + schedules), simulation
+   engine (fluid/packet, see ``repro.netsim.engine``), cc law,
    cap_scale, duration, and the Select/PathQ/Cong parameter dataclasses.
    Policy is NOT part of the key: ``fluid`` dispatches it dynamically on
    the per-cell ``policy_code`` (cfg.policy == "sweep"), so an entire
@@ -41,10 +42,11 @@ import numpy as np
 
 import repro  # noqa: F401  (installs the jax.shard_map forward-compat alias)
 from repro.launch.mesh import make_host_mesh
+from repro.netsim import engine as enginemod
 from repro.netsim import fluid, metrics
+from repro.netsim.engine import SimArrays, SimState
 from repro.netsim.experiment import (ExpSpec, build_world, make_flows,
                                      run_experiment, spec_to_cfg)
-from repro.netsim.fluid import SimArrays, SimState
 
 
 @jax.tree_util.register_dataclass
@@ -102,20 +104,13 @@ def _pad_tail(a: np.ndarray, n: int, fill) -> np.ndarray:
     return out
 
 
-# SimState fields with a leading per-flow axis (everything else is
-# per-link/per-pair and already shape-shared across the group)
-_FLOW_FIELDS = ("flow_path", "remaining", "rate", "active", "done", "fct_us",
-                "extra_wait", "rtt_steps", "route_step", "last_dec",
-                "cc_alpha", "cc_target", "prev_delay")
-# per-flow field -> inert pad value (mirrors fluid.build's init state)
-_STATE_PAD = {"flow_path": -1, "route_step": 1 << 20,
-              "last_dec": -(1 << 20), "rtt_steps": 1}
-
-
 def _pad_cell(arrs: SimArrays, state: SimState, F: int, A: int):
     """Pad one built cell to the group's (F, A). Padded flows never appear
     in ``arrivals`` (pad = -1), never activate, and contribute exact 0.0
-    to every link sum, so results are unchanged."""
+    to every link sum, so results are unchanged. Which fields carry a
+    leading flow axis (and their inert pad values) is the engine core's
+    contract (``engine.FLOW_FIELDS`` — the packet engine's extra state is
+    covered there too, and the state's own dataclass type is rebuilt)."""
     T = arrs.arrivals.shape[0]
     arrivals = np.full((T, A), -1, np.int32)
     arrivals[:, : arrs.arrivals.shape[1]] = np.asarray(arrs.arrivals)
@@ -128,14 +123,14 @@ def _pad_cell(arrs: SimArrays, state: SimState, F: int, A: int):
         policy_code=arrs.policy_code,
     )
     st = {}
-    for f in dataclasses.fields(SimState):
+    for f in dataclasses.fields(type(state)):
         v = getattr(state, f.name)
-        if f.name in _FLOW_FIELDS:
+        if f.name in enginemod.FLOW_FIELDS:
             st[f.name] = jnp.asarray(_pad_tail(
-                np.asarray(v), F, _STATE_PAD.get(f.name, 0)))
+                np.asarray(v), F, enginemod.STATE_PAD.get(f.name, 0)))
         else:
             st[f.name] = v            # per-link / per-pair: shared shape
-    return cell, SimState(**st)
+    return cell, type(state)(**st)
 
 
 def _stack(trees):
@@ -150,14 +145,17 @@ _VMAP_MAX_FLOWS = 512
 
 
 def _group_runner(shared: SimArrays, cfg, mesh=None, mode: str = "vmap"):
-    """One jitted callable running every cell of a group at once."""
+    """One jitted callable running every cell of a group at once. The
+    simulation backend is the group's static ``cfg.engine`` (part of the
+    trace key), so fluid and packet cells batch in separate groups."""
+    eng = enginemod.get_engine(cfg.engine)
 
     def one(cell: CellArrays, st: SimState):
         arrs = dataclasses.replace(
             shared, arrivals=cell.arrivals, f_arr_us=cell.f_arr_us,
             f_size=cell.f_size, f_pair=cell.f_pair, f_id=cell.f_id,
             policy_code=cell.policy_code)
-        return fluid.run_impl(arrs, st, cfg)
+        return eng.run_impl(arrs, st, cfg)
 
     def run_cells(cells: CellArrays, states: SimState):
         if mode == "vmap":
@@ -250,6 +248,7 @@ def run_sweep(specs: Sequence[ExpSpec], sequential: bool = False,
     group_cells: List[int] = []
     for (topology, cfg), idxs in groups.items():
         scen, table = build_world(topology)
+        eng = enginemod.get_engine(cfg.engine)
         # narrow the dynamic dispatch to the policies actually present
         present = {specs[i].policy for i in idxs}
         cfg = dataclasses.replace(cfg, sweep_policies=tuple(
@@ -261,7 +260,7 @@ def run_sweep(specs: Sequence[ExpSpec], sequential: bool = False,
             # build with the concrete policy so policy_code is baked; the
             # batched run itself uses the "sweep" meta-policy cfg
             cell_cfg = dataclasses.replace(cfg, policy=spec.policy)
-            arrs, st = fluid.build(table, flows, cell_cfg)
+            arrs, st = eng.build(table, flows, cell_cfg)
             built.append((flows, arrs, st))
 
         for chunk, chunk_idxs in _chunk_by_flows(built, idxs, max_pad_frac):

@@ -22,13 +22,30 @@ class SizeCDF:
     probs: np.ndarray   # cdf in [0,1], increasing, ends at 1
 
     def mean(self) -> float:
-        mid = (self.sizes[1:] + self.sizes[:-1]) / 2
+        """Exact mean of the sampled distribution: within a CDF segment
+        the size is log-linear in u (see ``sample``), so the conditional
+        mean is the *logarithmic* mean of the endpoints,
+        ``(s1 - s0) / ln(s1/s0)`` — not the arithmetic midpoint, which
+        belongs to linear-size interpolation and overstates every
+        segment. Load calibration divides by this, so the two must agree
+        or every "x% load" run is silently mis-dosed."""
+        s0, s1 = self.sizes[:-1], self.sizes[1:]
         w = np.diff(self.probs)
-        return float((mid * w).sum() + self.sizes[0] * self.probs[0])
+        with np.errstate(divide="ignore", invalid="ignore"):
+            logmean = np.where(np.isclose(s0, s1), s0,
+                               (s1 - s0) / np.log(s1 / s0))
+        return float((logmean * w).sum() + self.sizes[0] * self.probs[0])
 
     def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Invert the CDF with linear interpolation in log-size space.
+
+        The published breakpoints are log-spaced samples of smooth
+        heavy-tailed curves; linear-size interpolation within a segment
+        like [1 MB, 10 MB) puts half the segment's mass above 5.5 MB
+        (the tail draws bias large), where the curves' own log-linear
+        shape puts the median near the geometric mean ~3.2 MB."""
         u = rng.uniform(0, 1, n)
-        return np.interp(u, self.probs, self.sizes).astype(np.float64)
+        return np.exp(np.interp(u, self.probs, np.log(self.sizes)))
 
 
 WEB_SEARCH = SizeCDF(

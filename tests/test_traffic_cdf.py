@@ -1,0 +1,78 @@
+"""Workload CDF regression: sampling must invert the CDF in *log-size*
+space (as documented — the published breakpoints are log-spaced samples
+of smooth heavy-tailed curves), and ``mean()`` must be the exact mean of
+what ``sample`` draws, because load calibration divides by it."""
+import numpy as np
+import pytest
+
+from repro.traffic.cdf import ALI_STORAGE, FB_HADOOP, WEB_SEARCH, WORKLOADS
+
+ALL = [WEB_SEARCH, FB_HADOOP, ALI_STORAGE]
+
+
+@pytest.mark.parametrize("cdf", ALL, ids=lambda c: c.name)
+def test_sample_inverts_cdf_in_log_space(cdf):
+    """A draw at quantile u inside segment [p_i, p_{i+1}) must be the
+    *geometric* interpolation of the endpoint sizes, not the arithmetic
+    one (checked at explicit mid-quantiles of interior segments)."""
+    rng = np.random.default_rng(0)
+    for i in range(len(cdf.probs) - 1):
+        p0, p1 = cdf.probs[i], cdf.probs[i + 1]
+        s0, s1 = cdf.sizes[i], cdf.sizes[i + 1]
+        u = (p0 + p1) / 2
+
+        class FixedU:
+            def uniform(self, lo, hi, n):
+                return np.full(n, u)
+        got = cdf.__class__.sample(cdf, FixedU(), 3)
+        want = np.exp((np.log(s0) + np.log(s1)) / 2)   # geometric midpoint
+        assert np.allclose(got, want, rtol=1e-12), (cdf.name, i)
+        # regression against the old linear-size bias: the arithmetic
+        # midpoint is strictly larger on every non-degenerate segment
+        if s1 > 1.0001 * s0:
+            assert got[0] < (s0 + s1) / 2, (cdf.name, i)
+    del rng
+
+
+@pytest.mark.parametrize("cdf", ALL, ids=lambda c: c.name)
+def test_mean_matches_empirical_sample_mean(cdf):
+    """mean() is the analytic mean of the log-space sampler (logarithmic
+    segment means) — the empirical mean of a large draw must converge to
+    it, so load calibration doses the intended byte rate."""
+    rng = np.random.default_rng(7)
+    emp = cdf.sample(rng, 400_000).mean()
+    assert abs(emp - cdf.mean()) / cdf.mean() < 0.02, (cdf.name, emp, cdf.mean())
+
+
+def test_pinned_means_and_quantiles():
+    """Pin the three published workloads' analytic means and mid/tail
+    quantiles of the log-space inversion (values recorded at the fix;
+    any drift in breakpoints or interpolation shows up here)."""
+    pins = {
+        "websearch": dict(mean=235947.2, q50=6477.0, q90=159054.1,
+                          q99=5000000.0),
+        "fbhdp": dict(mean=218913.6, q50=500.0, q90=100000.0,
+                      q99=6309573.4),
+        "alistorage": dict(mean=874058.0, q50=4000.0, q90=1000000.0,
+                           q99=16000000.0),
+    }
+    for name, pin in pins.items():
+        cdf = WORKLOADS[name]
+        assert np.isclose(cdf.mean(), pin["mean"], rtol=1e-3), (
+            name, cdf.mean())
+        for q, want in [(0.5, pin["q50"]), (0.9, pin["q90"]),
+                        (0.99, pin["q99"])]:
+            got = float(np.exp(np.interp(q, cdf.probs, np.log(cdf.sizes))))
+            assert np.isclose(got, want, rtol=1e-3), (name, q, got)
+
+
+def test_log_space_fix_shrinks_heavy_tail_bias():
+    """The documented bug: linear-size interpolation biased heavy-tail
+    draws upward. The fixed sampler's mean must sit strictly below the
+    arithmetic-midpoint mean of the old interpolation for every
+    workload (log-mean < arithmetic mean on non-degenerate segments)."""
+    for cdf in ALL:
+        mid = (cdf.sizes[1:] + cdf.sizes[:-1]) / 2
+        old_mean = float((mid * np.diff(cdf.probs)).sum()
+                         + cdf.sizes[0] * cdf.probs[0])
+        assert cdf.mean() < old_mean, cdf.name
