@@ -56,6 +56,7 @@ def main() -> None:
         "fig10": figures.fig10_cc_orthogonality,
         "fig11": figures.fig11_ablations,
         "failover": figures.failover_bench,
+        "fig_large": figures.fig_large,
         "staleness": figures.staleness_ablation,
         "scenarios": figures.scenarios_bench,
         "fidelity": figures.fidelity_bench,

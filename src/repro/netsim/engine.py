@@ -293,16 +293,21 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
             f"dt_us={cfg.dt_us} (sig_delay_scale={cfg.sig_delay_scale}); "
             "increase dt_us or reduce sig_delay_scale")
 
-    # arrivals bucketed by step
+    # arrivals bucketed by step — vectorized (at 200k flows the per-flow
+    # Python loop this replaces was a real build cost). Stable argsort
+    # keeps flows within a step in ascending-index order, exactly the
+    # order the old loop filled slots in (bit-identical, see tests).
     T = cfg.num_steps
     step = np.minimum(flows.arrival_us // cfg.dt_us, T - 1).astype(np.int64)
     counts = np.bincount(step, minlength=T)
     A = max(int(counts.max()), 1)
     arrivals = np.full((T, A), -1, np.int32)
-    slot = np.zeros(T, np.int64)
-    for i, s in enumerate(step):
-        arrivals[s, slot[s]] = i
-        slot[s] += 1
+    order = np.argsort(step, kind="stable")
+    srt = step[order]
+    # slot within the step = rank among same-step flows (cumcount):
+    # searchsorted on the sorted array gives each element's first index
+    slot = np.arange(len(srt)) - np.searchsorted(srt, srt, side="left")
+    arrivals[srt, slot] = order
 
     # failure / degradation schedules -> per-link step arrays (the legacy
     # single-event fields fold into the same representation)

@@ -36,6 +36,11 @@ class ExpSpec:
     duration_us: int = 1_500_000
     seed: int = 0
     pairs: str = "main"              # main | all | <src>-<dst>
+    # background cross-traffic: every advertised pair NOT in ``pairs`` is
+    # dosed at this load while the foreground pairs run at ``load`` (0 =
+    # no cross-traffic). A dynamic sweep axis like load/seed/pairs — it
+    # only changes flow-table contents, never the compiled program.
+    bg_load: float = 0.0
     cap_scale: float = 0.125
     # signal-plane staleness axes (§7.3 ablations; both static/trace-level)
     sig_delay_scale: float = 1.0     # routing-signal propagation-delay scale
@@ -52,8 +57,14 @@ def build_world(topology: str):
     enumeration on the 13-DC mesh is the expensive numpy part)."""
     scen = scenarios.get(topology)
     t = scen.topology
-    pair_list = paths.all_pairs(t)
-    table = paths.build_path_table(t, pair_list)
+    # scenarios with helper nodes (wan2000's OTN segment nodes) advertise
+    # their real DC endpoints and enumeration budget; the default is every
+    # node pair under the stock install policy (bit-identical to before)
+    pair_list = (list(scen.traffic_pairs) if scen.traffic_pairs is not None
+                 else paths.all_pairs(t))
+    table = paths.build_path_table(t, pair_list, max_hops=scen.max_hops,
+                                   detour_delay=scen.detour_delay,
+                                   detour_hops=scen.detour_hops)
     fluid.attach_link_caps(table, t)
     return scen, table
 
@@ -73,11 +84,22 @@ def traffic_pair_ids(spec: ExpSpec, scen: scenarios.Scenario, table) -> list:
     return [pidx[(int(s), int(d))]]
 
 
+def background_pair_ids(table, fg_ids) -> list:
+    """Cross-traffic pairs: every advertised pair with candidates that is
+    not a foreground pair."""
+    fg = set(int(i) for i in fg_ids)
+    return [i for i in range(len(table.pair_src))
+            if table.pair_ncand[i] > 0 and i not in fg]
+
+
 def make_flows(spec: ExpSpec, scen: scenarios.Scenario, table):
+    fg_ids = traffic_pair_ids(spec, scen, table)
+    bg_ids = (background_pair_ids(table, fg_ids)
+              if spec.bg_load > 0 else None)
     return generate(table, cdfmod.WORKLOADS[spec.workload], spec.load,
-                    spec.duration_us,
-                    pair_ids=traffic_pair_ids(spec, scen, table),
-                    seed=spec.seed, cap_scale=spec.cap_scale)
+                    spec.duration_us, pair_ids=fg_ids,
+                    seed=spec.seed, cap_scale=spec.cap_scale,
+                    bg_pair_ids=bg_ids, bg_load=spec.bg_load)
 
 
 def spec_to_cfg(spec: ExpSpec, scen: scenarios.Scenario) -> SimConfig:

@@ -24,6 +24,14 @@ class FCTStats:
     completed: int
     offered: int
 
+    @property
+    def completion_rate(self) -> float:
+        """completed/offered — the survivorship-bias guard. Slowdown
+        percentiles are over completed flows only, so a policy that
+        strands flows past the horizon "wins" p99 unless every consumer
+        checks this alongside (benchmarks plumb it into every CSV row)."""
+        return self.completed / self.offered if self.offered else float("nan")
+
     def pct(self, q: float) -> float:
         return float(np.percentile(self.slowdown, q)) if len(self.slowdown) else float("nan")
 
@@ -50,16 +58,47 @@ class FCTStats:
 
 
 def fct_stats(final: SimState, table: PathTable, flows: FlowSet,
-              cfg: SimConfig) -> FCTStats:
+              cfg: SimConfig, mask=None) -> FCTStats:
+    """Slowdown stats over all flows, or the ``mask``-selected subset
+    (e.g. ``flows.foreground`` for the measured pairs only)."""
     done = np.asarray(final.done)
+    if mask is not None:
+        done = done & mask
     fct = np.asarray(final.fct_us)
     sizes = flows.size_bytes
     prop = table.pair_ideal_prop[flows.pair_id].astype(np.float64)
     cap = table.pair_ideal_cap[flows.pair_id] * 125.0 * cfg.cap_scale
     ideal = prop + sizes / cap
     sl = fct[done] / ideal[done]
+    offered = int(mask.sum()) if mask is not None else len(done)
     return FCTStats(slowdown=np.maximum(sl, 1.0), sizes=sizes[done],
-                    completed=int(done.sum()), offered=len(done))
+                    completed=int(done.sum()), offered=offered)
+
+
+def fg_bg_stats(final: SimState, table: PathTable, flows: FlowSet,
+                cfg: SimConfig, overall: FCTStats = None):
+    """(foreground, background) FCTStats — the measured pairs vs the
+    cross-traffic. ``background`` is None when everything is foreground
+    (no ``bg_load`` was dosed); pass already-computed whole-set stats as
+    ``overall`` to reuse them for that case instead of recomputing."""
+    fg = flows.foreground
+    if fg.all():
+        return (overall if overall is not None
+                else fct_stats(final, table, flows, cfg)), None
+    return (fct_stats(final, table, flows, cfg, mask=fg),
+            fct_stats(final, table, flows, cfg, mask=~fg))
+
+
+def per_pair_stats(final: SimState, table: PathTable, flows: FlowSet,
+                   cfg: SimConfig) -> Dict[int, FCTStats]:
+    """FCTStats per traffic pair (keys: pair ids present in the flow
+    set) — the large-WAN per-pair breakdown: a policy must not win the
+    aggregate by starving individual pairs."""
+    out: Dict[int, FCTStats] = {}
+    for pid in np.unique(flows.pair_id):
+        out[int(pid)] = fct_stats(final, table, flows, cfg,
+                                  mask=flows.pair_id == pid)
+    return out
 
 
 def link_utilization(final: SimState, arrs: SimArrays, cfg: SimConfig) -> np.ndarray:

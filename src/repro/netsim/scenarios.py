@@ -27,8 +27,9 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
+from repro.netsim import paths as pathsmod
 from repro.netsim import topo as topomod
 from repro.netsim.topo import Topology
 
@@ -44,6 +45,16 @@ class Scenario:
     # ((link_idx, at_us, factor), ...) — silent capacity loss
     degrade_sched: Tuple[Tuple[int, int, float], ...] = ()
     description: str = ""
+    # the advertised traffic endpoints: (src, dst) pairs the path table is
+    # built over (None = every node pair). Generators with non-DC helper
+    # nodes (wan2000's OTN segment nodes) restrict this to real DC pairs.
+    traffic_pairs: Optional[Tuple[Tuple[int, int], ...]] = None
+    # candidate-enumeration knobs forwarded to paths.build_path_table —
+    # segmented topologies count hops in *links*, so a one-haul detour is
+    # `segs` extra hops and the defaults would prune every alternate route
+    max_hops: int = pathsmod.MAX_HOPS
+    detour_delay: float = 1.5
+    detour_hops: int = 1
 
 
 _REGISTRY: Dict[str, Callable[..., Scenario]] = {}
@@ -195,6 +206,51 @@ def staleness(deg_ms: int = 100, factor: float = 0.1,
 
 
 @register
+def wan2000(dcs: int = 20, segs: int = 2, chords: int = 6, seed: int = 0,
+            fail_ms: int = 0, deg_ms: int = 0,
+            deg_factor: float = 0.25) -> Scenario:
+    """Large-scale 2000 km WAN (paper's headline scale claim, MatchRDMA's
+    segmented-OTN regime): ``dcs`` DCs (20-64) on a heterogeneous ring +
+    ``chords`` shortcut hauls, every haul a chain of ``segs`` OTN spans
+    in the 2000 km delay class, and a testbed-style fast-fat/slow-thin
+    parallel-haul main pair DC0<->DC1. Advertised traffic pairs are
+    exactly the DC pairs with m in [2,8] first-hop-distinct candidates
+    (segment nodes are never endpoints), so ``pairs="all"`` +
+    ``bg_load`` dose a genuinely multi-path WAN. ``fail_ms``/``deg_ms``
+    (optional) trip or silently degrade the fattest main-pair haul's
+    first span mid-run — the span-level partial-failure case."""
+    w = topomod.wan_2000km(dcs=int(dcs), segs=int(segs), chords=int(chords),
+                           seed=int(seed))
+    max_hops, ddelay, dhops = 2 * int(segs), 3.0, int(segs)
+    dc_pairs = [(s, d) for s in w.dc_nodes for d in w.dc_nodes if s != d]
+    # enumerate over ALL DC pairs to find the advertised (multi-path)
+    # subset; build_world re-enumerates over just that subset so pair
+    # indices stay compact — the throwaway build is numpy-cheap and paid
+    # once per topology string (build_world caches)
+    table = pathsmod.build_path_table(w.topology, dc_pairs,
+                                      max_hops=max_hops, detour_delay=ddelay,
+                                      detour_hops=dhops)
+    adv = tuple((int(s), int(d)) for s, d, n in
+                zip(table.pair_src, table.pair_dst, table.pair_ncand)
+                if n >= 2)
+    fail_sched: Tuple[Tuple[int, int], ...] = ()
+    degrade_sched: Tuple[Tuple[int, int, float], ...] = ()
+    li = w.main_haul_links[0]      # fattest main-pair haul, first span
+    if int(fail_ms) > 0:
+        fail_sched = ((li, int(fail_ms) * 1000),)
+    if int(deg_ms) > 0:
+        at = int(deg_ms) * 1000
+        degrade_sched = ((li, at, float(deg_factor)),
+                         (li + 1, at, float(deg_factor)))  # both directions
+    return Scenario(f"wan2000:dcs={dcs},segs={segs}", w.topology,
+                    main_pair=w.main_pair, fail_sched=fail_sched,
+                    degrade_sched=degrade_sched,
+                    description=wan2000.__doc__,
+                    traffic_pairs=adv, max_hops=max_hops,
+                    detour_delay=ddelay, detour_hops=dhops)
+
+
+@register
 def jitter(base: str = "testbed8", frac: float = 0.2, seed: int = 0) -> Scenario:
     """Delay-asymmetry jitter over a base scenario's topology: every
     directed link's delay independently scaled by U[1-frac, 1+frac], so
@@ -205,4 +261,6 @@ def jitter(base: str = "testbed8", frac: float = 0.2, seed: int = 0) -> Scenario
     return Scenario(f"jitter:base={base},frac={frac},seed={seed}", t,
                     main_pair=b.main_pair, fail_sched=b.fail_sched,
                     degrade_sched=b.degrade_sched,
-                    description=jitter.__doc__)
+                    description=jitter.__doc__,
+                    traffic_pairs=b.traffic_pairs, max_hops=b.max_hops,
+                    detour_delay=b.detour_delay, detour_hops=b.detour_hops)

@@ -72,6 +72,11 @@ class CellResult:
     util: np.ndarray           # (L,) effective-capacity utilization
     final: SimpleNamespace     # done / fct_us / flow_path / serv_bytes / c_path
     flows: object              # the cell's FlowSet
+    # foreground/background split when the cell doses cross-traffic
+    # (spec.bg_load > 0): stats over the measured pairs vs the rest.
+    # stats_fg == stats and stats_bg is None for all-foreground cells.
+    stats_fg: metrics.FCTStats = None
+    stats_bg: metrics.FCTStats = None
 
 
 @dataclasses.dataclass
@@ -223,15 +228,17 @@ def run_sweep(specs: Sequence[ExpSpec], sequential: bool = False,
         results = []
         for spec in specs:
             stats, util, (_, table, flows, cfg, final) = run_experiment(spec)
-            results.append(CellResult(
-                spec=spec, stats=stats, util=util,
-                final=SimpleNamespace(
-                    done=np.asarray(final.done),
-                    fct_us=np.asarray(final.fct_us),
-                    flow_path=np.asarray(final.flow_path),
-                    serv_bytes=np.asarray(final.serv_bytes),
-                    c_path=np.asarray(final.c_path)),
-                flows=flows))
+            view = SimpleNamespace(
+                done=np.asarray(final.done),
+                fct_us=np.asarray(final.fct_us),
+                flow_path=np.asarray(final.flow_path),
+                serv_bytes=np.asarray(final.serv_bytes),
+                c_path=np.asarray(final.c_path))
+            fg, bg = metrics.fg_bg_stats(view, table, flows, cfg,
+                                         overall=stats)
+            results.append(CellResult(spec=spec, stats=stats, util=util,
+                                      final=view, flows=flows,
+                                      stats_fg=fg, stats_bg=bg))
         return SweepReport(results, len(results), len(results),
                            time.perf_counter() - t0, [1] * len(results))
 
@@ -303,8 +310,11 @@ def run_sweep(specs: Sequence[ExpSpec], sequential: bool = False,
                                        c_path=final.c_path[j])
                 stats = metrics.fct_stats(view, table, flows, cfg)
                 util = metrics.link_utilization(view, shared, cfg)
+                fg, bg = metrics.fg_bg_stats(view, table, flows, cfg,
+                                             overall=stats)
                 results[i] = CellResult(spec=spec, stats=stats, util=util,
-                                        final=view, flows=flows)
+                                        final=view, flows=flows,
+                                        stats_fg=fg, stats_bg=bg)
 
     return SweepReport(results, len(specs), len(group_cells),
                        time.perf_counter() - t0, group_cells)

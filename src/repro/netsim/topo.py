@@ -140,6 +140,105 @@ def segmented_parallel(route_caps, route_delays_us, segs: int = 2,
     return Topology(f"segmented-parallel-{n}x{segs}", dst + 1, _bidir(edges))
 
 
+# ------------------------------------------------- large-scale 2000 km WAN
+# Declared hardware classes for the wan_2000km generator; the generator
+# invariants test asserts every emitted link against these.
+WAN_CAP_CLASSES = (400, 200, 100, 40)           # Gbps per haul
+WAN_DELAY_CLASSES_US = (8_000, 10_000, 12_000)  # one-way per ~2000 km haul
+
+
+@dataclasses.dataclass(frozen=True)
+class WanWorld:
+    """A generated WAN plus the metadata the scenario layer needs."""
+    topology: Topology
+    main_pair: Tuple[int, int]
+    dc_nodes: Tuple[int, ...]        # traffic endpoints (segment nodes excluded)
+    main_haul_links: Tuple[int, ...]  # first directed link of each main-pair
+    #                                   parallel haul, fattest first
+
+
+def wan_2000km(dcs: int = 20, segs: int = 2, chords: int = 6,
+               seed: int = 0) -> WanWorld:
+    """Large-scale heterogeneous 2000 km-class WAN (the paper's headline
+    "large-scale NS-3 simulations under the 2000 km inter-DC scenario",
+    stretched into MatchRDMA's segmented-OTN regime).
+
+    Structure: ``dcs`` DC nodes on a ring of long-haul fiber hauls, plus
+    ``chords`` random shortcut hauls and two extra *parallel* hauls on
+    the DC0<->DC1 edge (so the designated main pair has a fast-fat /
+    medium / slow-thin candidate mix like the 8-DC testbed). Every haul
+    is ~2000 km: one-way delay from ``WAN_DELAY_CLASSES_US``, capacity
+    from ``WAN_CAP_CLASSES``, and each haul is a chain of ``segs``
+    amplified/regenerated OTN segments (dedicated intermediate nodes) so
+    a single span can fail or degrade independently.
+
+    Deterministic under ``(dcs, segs, chords, seed)``. DC nodes are
+    0..dcs-1; segment nodes follow. Paths between DCs are chains of
+    whole hauls, so candidate enumeration needs ``max_hops = 2 * segs``
+    (two hauls) and a detour budget of one extra haul — the scenario
+    layer passes those via ``Scenario.max_hops``/``detour_*``.
+    """
+    if dcs < 4:
+        raise ValueError(f"wan_2000km needs dcs >= 4, got {dcs}")
+    if segs < 1:
+        raise ValueError(f"wan_2000km needs segs >= 1, got {segs}")
+    rng = np.random.default_rng(seed)
+    # hauls as DC-level edges: (a, b, cap_gbps, one_way_delay_us)
+    hauls: List[Link] = []
+    # the main pair's three parallel hauls, fattest first (testbed-style
+    # heterogeneity: fast-fat / medium / slow-thin)
+    main = [(0, 1, 200, WAN_DELAY_CLASSES_US[0]),
+            (0, 1, 100, WAN_DELAY_CLASSES_US[1]),
+            (0, 1, 40, WAN_DELAY_CLASSES_US[2])]
+    hauls += main
+    for i in range(1, dcs):   # rest of the ring (edge 0-1 is covered above)
+        cap = int(rng.choice(WAN_CAP_CLASSES))
+        dl = int(rng.choice(WAN_DELAY_CLASSES_US))
+        hauls.append((i, (i + 1) % dcs, cap, dl))
+    seen = {(a, b) for a, b, _, _ in hauls}
+    tries = 0
+    placed = 0
+    while placed < chords and tries < 20 * chords:
+        tries += 1
+        a = int(rng.integers(0, dcs))
+        off = int(rng.choice([2, 3, max(dcs // 2, 4)]))
+        b = (a + off) % dcs
+        if a == b or (a, b) in seen or (b, a) in seen:
+            continue
+        seen.add((a, b))
+        hauls.append((a, b, int(rng.choice(WAN_CAP_CLASSES)),
+                      int(rng.choice(WAN_DELAY_CLASSES_US))))
+        placed += 1
+    if placed < chords:
+        # never return a sparser WAN than the scenario string advertises —
+        # downstream claims (advertised-pair counts, multipath fraction)
+        # would silently describe a different topology
+        raise ValueError(
+            f"wan_2000km(dcs={dcs}) could only place {placed} of {chords} "
+            "requested chords (distinct {2,3,dcs/2}-offset slots exhausted); "
+            "lower chords= or raise dcs=")
+
+    # expand each haul into `segs` spans through dedicated segment nodes;
+    # _bidir emits (fwd, rev) per span, so a haul's first directed link
+    # (the one schedules target) is at index 2 * (its first span's row)
+    edges: List[Link] = []
+    next_node = dcs
+    main_first: List[int] = []
+    for h, (a, b, cap, dl) in enumerate(hauls):
+        seg_delay = max(dl // segs, 1)
+        nodes = [a] + [next_node + j for j in range(segs - 1)] + [b]
+        next_node += segs - 1
+        if h < len(main):
+            main_first.append(2 * len(edges))
+        for u, v in zip(nodes[:-1], nodes[1:]):
+            edges.append((u, v, cap, seg_delay))
+    t = Topology(f"wan-2000km-{dcs}dc-{segs}seg-s{seed}", next_node,
+                 _bidir(edges))
+    return WanWorld(topology=t, main_pair=(0, 1),
+                    dc_nodes=tuple(range(dcs)),
+                    main_haul_links=tuple(main_first))
+
+
 def delay_jitter(base: Topology, frac: float = 0.2, seed: int = 0) -> Topology:
     """Apply asymmetric delay jitter: every *directed* link's propagation
     delay is independently scaled by U[1-frac, 1+frac], so forward and
