@@ -1,0 +1,101 @@
+"""Wall-clock regression guard (``benchmarks.run --bench``).
+
+Times the three cost centers a refactor is most likely to slow down —
+world build + flow generation, the fluid scan, and the packet scan — at
+quick scale on the 8-DC testbed, plus the kernel microbenchmarks, and
+writes ``benchmarks/out/BENCH_netsim.json``. Against the committed
+``benchmarks/BENCH_netsim.baseline.json`` any row slower than
+``WARN_RATIO`` x baseline prints a ``BENCH-WARN`` line — a *soft* signal
+(CI boxes are noisy; the JSON artifact is the durable record), never a
+build failure.
+
+The scan timings are split into ``*_compile`` (first call: trace + XLA
+compile) and ``*_run`` (steady-state re-execution), because a refactor
+can regress either independently — e.g. extra decision branches mostly
+show up in compile time, per-step state bloat in run time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+from typing import Dict
+
+import jax
+
+from repro.netsim import engine as enginemod
+from repro.netsim.experiment import ExpSpec, build_experiment, build_world
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+BASELINE = os.path.join(os.path.dirname(__file__),
+                        "BENCH_netsim.baseline.json")
+WARN_RATIO = 1.3
+
+_SPEC = dict(topology="testbed8", load=0.4, duration_us=300_000, seed=1)
+
+
+def _scan_times(engine: str) -> Dict[str, float]:
+    spec = ExpSpec(engine=engine, policy="lcmp", **_SPEC)
+    _, table, flows, cfg = build_experiment(spec)
+    eng = enginemod.get_engine(engine)
+    arrs, st = eng.build(table, flows, cfg)
+    t0 = time.perf_counter()
+    jax.block_until_ready(eng.run(arrs, st, cfg))
+    compile_us = (time.perf_counter() - t0) * 1e6
+    runs = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.run(arrs, st, cfg))
+        runs.append((time.perf_counter() - t0) * 1e6)
+    return {f"{engine}_scan_compile": compile_us,
+            f"{engine}_scan_run": min(runs)}
+
+
+def collect() -> Dict[str, float]:
+    from benchmarks import kernel_bench
+    rows: Dict[str, float] = {}
+    build_world.cache_clear()          # time a cold world build
+    t0 = time.perf_counter()
+    build_experiment(ExpSpec(engine="fluid", policy="lcmp", **_SPEC))
+    rows["build_world_and_flows"] = (time.perf_counter() - t0) * 1e6
+    rows.update(_scan_times("fluid"))
+    rows.update(_scan_times("packet"))
+    for name, us, _ in kernel_bench.all_benches():
+        rows[name] = us               # rows already carry the kernel/ tag
+    return rows
+
+
+def run_bench() -> None:
+    rows = collect()
+    os.makedirs(OUT, exist_ok=True)
+    report = {
+        "meta": {"platform": platform.platform(),
+                 "python": platform.python_version(),
+                 "jax": jax.__version__,
+                 "spec": _SPEC},
+        "rows_us": rows,
+    }
+    path = os.path.join(OUT, "BENCH_netsim.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"bench: wrote {path}")
+    if not os.path.exists(BASELINE):
+        print("bench: no committed baseline, skipping comparison")
+        return
+    with open(BASELINE) as f:
+        base = json.load(f)["rows_us"]
+    for name, us in sorted(rows.items()):
+        ref = base.get(name)
+        if ref is None:
+            print(f"bench: {name}: {us:.0f}us (no baseline row)")
+            continue
+        ratio = us / ref if ref > 0 else float("inf")
+        flag = (f"  BENCH-WARN >{WARN_RATIO:g}x baseline"
+                if ratio > WARN_RATIO else "")
+        print(f"bench: {name}: {us:.0f}us vs {ref:.0f}us "
+              f"({ratio:.2f}x){flag}")
+
+
+if __name__ == "__main__":
+    run_bench()

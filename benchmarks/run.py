@@ -16,9 +16,9 @@ import argparse
 import sys
 import traceback
 
-# suites that pick their own engine(s): fidelity runs both backends by
-# design; kernels have no simulation engine at all
-_ENGINE_AGNOSTIC = ("fidelity", "kernels")
+# suites that pick their own engine(s): fidelity and fig_multipath run
+# both backends by design; kernels have no simulation engine at all
+_ENGINE_AGNOSTIC = ("fidelity", "fig_multipath", "kernels")
 
 
 def main() -> None:
@@ -37,7 +37,17 @@ def main() -> None:
     ap.add_argument("--sequential", action="store_true",
                     help="run figure grids cell-by-cell (the pre-sweep "
                          "baseline) instead of the batched sweep engine")
+    ap.add_argument("--bench", action="store_true",
+                    help="run the wall-clock regression guard instead of "
+                         "figure suites: writes benchmarks/out/"
+                         "BENCH_netsim.json and soft-warns on rows >1.3x "
+                         "the committed baseline (see benchmarks.perf)")
     args = ap.parse_args()
+
+    if args.bench:
+        from benchmarks import perf
+        perf.run_bench()
+        return
 
     from benchmarks import figures, kernel_bench
 
@@ -57,6 +67,7 @@ def main() -> None:
         "fig11": figures.fig11_ablations,
         "failover": figures.failover_bench,
         "fig_large": figures.fig_large,
+        "fig_multipath": figures.fig_multipath,
         "staleness": figures.staleness_ablation,
         "scenarios": figures.scenarios_bench,
         "fidelity": figures.fidelity_bench,

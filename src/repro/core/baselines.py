@@ -1,5 +1,7 @@
 """Routing baselines the paper compares against (§6.1): ECMP, WCMP, UCMP,
-and a RedTE-like coarse-timescale distributed-TE policy.
+a RedTE-like coarse-timescale distributed-TE policy, and a FatPaths-style
+layered scheme (flowlet re-hashing is supplied by the engine's
+re-decision tick, see ``netsim.engine.redecide_tick``).
 
 Each baseline shares the signature
     ``choose(flow_ids, path_delay_us, path_cap_gbps, valid, **state) -> idx``
@@ -65,6 +67,34 @@ def ucmp(flow_ids, path_delay_us, path_cap_gbps, valid,
     choice = jnp.take_along_axis(idx, best[:, None], axis=-1)[:, 0]
     any_valid = jnp.asarray(valid, bool).sum(-1) > 0
     return jnp.where(any_valid, choice, -1)
+
+
+def fatpaths(flow_ids, path_len, valid, c_cong, cong_thresh: int = 230):
+    """FatPaths-style layered routing (arXiv 1906.10885, adapted to the
+    WAN candidate-set setting): candidates are grouped into layers by
+    hop-count stretch over the pair's shortest valid route; a flow(let)
+    hashes uniformly inside the minimal-stretch layer and spills to the
+    *full* valid set only when every minimal-layer candidate looks
+    congested from the ingress (``c_cong >= cong_thresh`` — the same
+    "all highly congested" bar LCMP's fallback uses, so neither scheme
+    gets a private threshold). The per-flowlet re-hash (salted flow ids
+    from the re-decision tick) supplies the adaptivity; the layering
+    itself stays delay- and cost-oblivious, which is exactly the gap the
+    LCMP comparison probes on long-haul topologies.
+
+    ``path_len``: (F, P) or (P,) int hop counts per candidate slot.
+    """
+    valid = jnp.asarray(valid, bool)
+    F = jnp.asarray(flow_ids).shape[0]
+    plen = jnp.asarray(path_len, jnp.int32)
+    plen = jnp.broadcast_to(plen, (F,) + plen.shape[-1:])
+    valid = jnp.broadcast_to(valid, plen.shape)
+    cong = jnp.broadcast_to(jnp.asarray(c_cong, jnp.int32), plen.shape)
+    minlen = jnp.where(valid, plen, _BIG).min(-1)               # (F,)
+    layer0 = valid & (plen == minlen[:, None])
+    spill = jnp.where(layer0, cong, _BIG).min(-1) >= cong_thresh
+    active_set = jnp.where(spill[:, None], valid, layer0)
+    return ecmp_select(flow_ids, active_set)
 
 
 @jax.tree_util.register_dataclass

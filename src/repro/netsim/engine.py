@@ -65,15 +65,33 @@ HIST = 8192          # history rings (steps); must exceed the max RTT and
 # dispatches on the per-experiment ``SimArrays.policy_code`` scalar instead
 # of a Python branch, so a vmapped batch can mix policies in one trace
 # (the sweep engine's whole-grid-single-XLA-computation mode).
-POLICIES = ("lcmp", "lcmp_w", "ecmp", "ucmp", "wcmp", "redte")
+#
+# The mapping is FROZEN — codes leak into trace keys, CSV rows and
+# ``SimArrays.policy_code``, so new policies may only append fresh codes,
+# never renumber existing ones (pinned by tests/test_redecision.py).
+POLICY_CODES = {
+    "lcmp": 0,       # paper §3-§5: cost + congestion two-stage select
+    "lcmp_w": 1,     # beyond-paper: capacity-weighted stage-2 hash
+    "ecmp": 2,
+    "ucmp": 3,
+    "wcmp": 4,
+    "redte": 5,
+    "fatpaths": 6,   # layered min-stretch routing + flowlet re-hash
+    "amp": 7,        # multi-subflow transport (per-subflow ECMP hash)
+    "lcmp_r": 8,     # ablation: LCMP with periodic mid-flow re-decision
+}
+POLICIES = tuple(POLICY_CODES)
+# policies whose law re-decides mid-flow when the engine's eligibility
+# trigger fires (flowlet idle gap / re-decision epoch)
+REDECIDE_POLICIES = ("fatpaths", "lcmp_r")
 ENGINES = ("fluid", "packet")
 _NEVER = (1 << 30)   # sentinel step for "this link never fails/degrades"
 
 
 def policy_code(policy: str) -> int:
-    if policy not in POLICIES:
+    if policy not in POLICY_CODES:
         raise ValueError(f"unknown policy {policy!r}; valid: {POLICIES}")
-    return POLICIES.index(policy)
+    return POLICY_CODES[policy]
 
 
 @runtime_checkable
@@ -153,6 +171,18 @@ class SimConfig:
     # The sweep engine narrows this to the ones actually present in a
     # batch so un-swept policies cost nothing per step.
     sweep_policies: tuple = POLICIES
+    # ---- mid-flow re-decision plane (REDECIDE_POLICIES only) ----
+    # Eligibility is engine-specific: the packet engine re-hashes a flow
+    # whose queues drained for >= flowlet_gap_us (FatPaths flowlet
+    # switching — observable idle gaps exist only where packets do); the
+    # fluid engine re-decides on a redecide_period_us timer epoch. 0
+    # disables the plane for that engine and keeps the step bit-identical
+    # to pinned-path routing (asserted in tests).
+    flowlet_gap_us: int = 0
+    redecide_period_us: int = 0
+    # amp only: subflows per flow (traffic/gen.py splits sizes; metrics
+    # scores the parent flow at last-subflow completion)
+    n_subflows: int = 1
 
     @property
     def num_steps(self) -> int:
@@ -180,6 +210,8 @@ class SimState:
     extra_wait: jnp.ndarray    # (F,) f32 queue-wait component
     rtt_steps: jnp.ndarray     # (F,) i32
     route_step: jnp.ndarray    # (F,) i32 step the flow was (re)routed at
+    route_nonce: jnp.ndarray   # (F,) i32 re-decision counter (salts the
+                               # flow's hash key per flowlet/epoch)
     last_dec: jnp.ndarray      # (F,) i32 step of last MD
     cc_alpha: jnp.ndarray      # (F,) f32 (DCTCP EWMA)
     cc_target: jnp.ndarray     # (F,) f32 (DCQCN target rate / fast recovery)
@@ -206,13 +238,13 @@ class SimState:
 # appended here so one list covers both state types; fields absent from
 # a given state dataclass are simply never looked up.
 FLOW_FIELDS = ("flow_path", "remaining", "rate", "active", "done", "fct_us",
-               "extra_wait", "rtt_steps", "route_step", "last_dec",
-               "cc_alpha", "cc_target", "prev_delay",
+               "extra_wait", "rtt_steps", "route_step", "route_nonce",
+               "last_dec", "cc_alpha", "cc_target", "prev_delay",
                # packet engine (see packet.PacketState)
-               "fq", "credit", "delivered")
+               "fq", "credit", "delivered", "last_tx")
 # per-flow field -> inert pad value (mirrors build()'s init state)
 STATE_PAD = {"flow_path": -1, "route_step": 1 << 20,
-             "last_dec": -(1 << 20), "rtt_steps": 1}
+             "last_dec": -(1 << 20), "rtt_steps": 1, "last_tx": 1 << 20}
 
 
 @jax.tree_util.register_dataclass
@@ -358,6 +390,7 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
         extra_wait=jnp.zeros((F,), jnp.float32),
         rtt_steps=jnp.ones((F,), jnp.int32),
         route_step=jnp.full((F,), 1 << 20, jnp.int32),   # sentinel: unrouted
+        route_nonce=jnp.zeros((F,), jnp.int32),
         last_dec=jnp.full((F,), -(1 << 20), jnp.int32),
         cc_alpha=jnp.zeros((F,), jnp.float32),
         cc_target=jnp.zeros((F,), jnp.float32),
@@ -488,36 +521,47 @@ def _path_queue_wait(st: SimState, ar: SimArrays, path_idx) -> jnp.ndarray:
                      / ar.link_cap[jnp.maximum(hop, 0)], 0.0).sum(-1)
 
 
-def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
-    """Decide paths for the batch of flows arriving this step."""
-    idx = ar.arrivals[t]                        # (A,)
-    is_flow = idx >= 0
-    fidx = jnp.maximum(idx, 0)
-    pair = ar.f_pair[fidx]                      # (A,)
-    cand = ar.pair_cand[pair]                   # (A, K)
-    cand_ok = cand >= 0
+def decide(t, fid, pair, st: SimState, ar: SimArrays, cfg: SimConfig,
+           sig_step=None):
+    """The single policy-dispatched path-decision core.
+
+    Every caller that turns (hash key, pair) into a candidate choice —
+    arrival routing, lazy failover, and the mid-flow re-decision tick —
+    goes through here, so all policies apply *their own law* at every
+    decision point and sweep-mode dynamic dispatch is implemented once.
+
+    ``fid``: (N,) u32 hash keys. Re-decision callers salt these with the
+    flow's nonce so a re-hash can land elsewhere; nonce 0 leaves the key
+    unchanged (``fmix32(0) == 0``), preserving arrival decisions exactly.
+    ``sig_step``: the step whose ``hist_c`` slot the congestion view
+    reads (default ``t``; the failover caller runs before this step's
+    monitor tick and passes ``t - 1``).
+
+    Returns ``(k_idx, chosen)``: (N,) candidate-slot index and (N,)
+    global path index, both -1 where no valid candidate exists.
+    """
+    cand = ar.pair_cand[pair]                                   # (N, K)
     cpad = jnp.maximum(cand, 0)
 
     # candidate liveness: every hop of the path must be alive
-    hop = ar.path_links[cpad]                                   # (A,K,H)
+    hop = ar.path_links[cpad]                                   # (N,K,H)
     hop_alive = jnp.where(hop >= 0, st.link_alive[jnp.maximum(hop, 0)], True)
-    alive = hop_alive.all(-1)
-    valid = cand_ok & alive
+    valid = (cand >= 0) & hop_alive.all(-1)
 
-    fid = ar.f_id[fidx]
     c_path = st.c_path[cpad]
-    c_cong = path_cong_view(st.hist_c, hop, ar.path_sig_delay[cpad], t)
+    c_cong = path_cong_view(st.hist_c, hop, ar.path_sig_delay[cpad],
+                            t if sig_step is None else sig_step)
     delay = ar.path_prop[cpad]
     capg = ar.path_cap_gbps[cpad]
 
     def _choice(policy: str) -> jnp.ndarray:
-        if policy == "lcmp":
-            return selmod.select_egress(fid, c_path, c_cong, valid,
+        if policy in ("lcmp", "lcmp_r"):    # lcmp_r differs only in the
+            return selmod.select_egress(fid, c_path, c_cong, valid,  # tick
                                         cfg.select)[0]
         if policy == "lcmp_w":  # beyond-paper: capacity-weighted stage 2
             return selmod.select_egress(fid, c_path, c_cong, valid,
                                         cfg.select, weights=capg)[0]
-        if policy == "ecmp":
+        if policy in ("ecmp", "amp"):       # amp = per-subflow ECMP hash
             return bl.ecmp(fid, delay, capg, valid)
         if policy == "ucmp":
             return bl.ucmp(fid, delay, capg, valid)
@@ -525,6 +569,9 @@ def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
             return bl.wcmp(fid, delay, capg, valid)
         if policy == "redte":
             return bl._weighted_hash(fid, st.redte_w[pair], valid)
+        if policy == "fatpaths":
+            return bl.fatpaths(fid, ar.path_len[cpad], valid, c_cong,
+                               cong_thresh=cfg.select.cong_fallback)
         raise ValueError(policy)
 
     if cfg.policy == "sweep":
@@ -541,7 +588,19 @@ def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
 
     chosen = jnp.take_along_axis(cand, jnp.maximum(k_idx, 0)[:, None],
                                  axis=1)[:, 0]
-    chosen = jnp.where((k_idx >= 0) & is_flow, chosen, -1)      # (A,)
+    chosen = jnp.where(k_idx >= 0, chosen, -1)                  # (N,)
+    return k_idx, chosen
+
+
+def _route_arrivals(t, st: SimState, ar: SimArrays, cfg: SimConfig):
+    """Decide paths for the batch of flows arriving this step."""
+    idx = ar.arrivals[t]                        # (A,)
+    is_flow = idx >= 0
+    fidx = jnp.maximum(idx, 0)
+    pair = ar.f_pair[fidx]                      # (A,)
+
+    _, chosen = decide(t, ar.f_id[fidx], pair, st, ar, cfg)
+    chosen = jnp.where(is_flow, chosen, -1)                     # (A,)
 
     ok = chosen >= 0
     cpath_sel = jnp.maximum(chosen, 0)
@@ -683,35 +742,18 @@ def _cc_update(t, st: SimState, ar: SimArrays, cfg: SimConfig,
 def _reroute_dead(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> SimState:
     """Re-decide every active flow whose pinned path lost a link (the
     data-plane lazy-failover semantics, vectorized over all flows once at
-    the trip step)."""
+    the trip step). Failover goes through the shared decision core, so
+    every policy — wcmp/ucmp/redte cells in a sweep included — re-decides
+    under its *own* law against the post-trip liveness mask.
+
+    The reroute runs before this step's monitor tick, so slot t is not
+    yet written: the freshest signal physics offers here is step t-1."""
     hop = ar.path_links[jnp.maximum(st.flow_path, 0)]
     dead = jnp.where(hop >= 0, ~st.link_alive[jnp.maximum(hop, 0)], False).any(-1)
     move = st.active & dead & (st.flow_path >= 0)
 
-    pair = ar.f_pair
-    cand = ar.pair_cand[pair]                                   # (F,K)
-    cpad = jnp.maximum(cand, 0)
-    h = ar.path_links[cpad]
-    h_alive = jnp.where(h >= 0, st.link_alive[jnp.maximum(h, 0)], True).all(-1)
-    valid = (cand >= 0) & h_alive
-    c_path = st.c_path[cpad]
-    # the reroute runs before this step's monitor tick, so slot t is not
-    # yet written: the freshest signal physics offers here is step t-1
-    c_cong = path_cong_view(st.hist_c, h, ar.path_sig_delay[cpad], t - 1)
-    lcmp_k = lambda: selmod.select_egress(ar.f_id, c_path, c_cong, valid,
-                                          cfg.select)[0]
-    ecmp_k = lambda: bl.ecmp(ar.f_id, ar.path_prop[cpad],
-                             ar.path_cap_gbps[cpad], valid)
-    if cfg.policy == "lcmp":
-        k_idx = lcmp_k()
-    elif cfg.policy == "sweep" and "lcmp" in cfg.sweep_policies:
-        # same semantics per cell: lcmp re-decides, baselines re-hash
-        k_idx = jnp.where(ar.policy_code == POLICIES.index("lcmp"),
-                          lcmp_k(), ecmp_k())
-    else:  # baselines re-hash uniformly on failure
-        k_idx = ecmp_k()
-    new_path = jnp.take_along_axis(cand, jnp.maximum(k_idx, 0)[:, None],
-                                   axis=1)[:, 0]
+    k_idx, new_path = decide(t, ar.f_id, ar.f_pair, st, ar, cfg,
+                             sig_step=t - 1)
     ok = move & (k_idx >= 0)
     npad = jnp.maximum(new_path, 0)
     # CC state re-initializes with the path: a rerouted flow is "first
@@ -732,3 +774,60 @@ def _reroute_dead(t, st: SimState, ar: SimArrays, cfg: SimConfig) -> SimState:
                             // cfg.dt_us, 1).astype(jnp.int32), st.rtt_steps),
         route_step=jnp.where(ok, jnp.int32(0) + t, st.route_step),
         active=jnp.where(move & (k_idx < 0), False, st.active))
+
+
+def wants_redecide(cfg: SimConfig) -> bool:
+    """Python-level (trace-time) gate for the mid-flow re-decision plane:
+    true iff the engine's eligibility knob is armed AND some policy in
+    the dispatch set actually re-decides. False keeps the step function
+    bit-identical to the pinned-path program (no extra ops traced)."""
+    knob = (cfg.flowlet_gap_us if cfg.engine == "packet"
+            else cfg.redecide_period_us)
+    if knob <= 0:
+        return False
+    pols = cfg.sweep_policies if cfg.policy == "sweep" else (cfg.policy,)
+    return any(p in REDECIDE_POLICIES for p in pols)
+
+
+def redecide_tick(t, st: SimState, ar: SimArrays, cfg: SimConfig,
+                  eligible) -> SimState:
+    """Mid-flow re-decision for eligible active flows (the third caller
+    of ``decide``). ``eligible`` is the engine-specific trigger mask:
+    the packet engine passes flowlet idle-gap detection, the fluid
+    engine an all-true mask under a ``redecide_period_us`` timer cond.
+
+    Each opportunity bumps the flow's nonce, and the decision hashes on
+    ``f_id ^ fmix32(nonce)`` — a fresh pseudo-random key per flowlet
+    (FatPaths re-hash semantics) that still replays deterministically.
+    Unlike failover, a path change here keeps the flow's CC rate state:
+    a flowlet switch is the same transport entity continuing on a new
+    path, not a restart — only the route bookkeeping (RTT, route step,
+    standing-queue wait) follows the new path. The feedback gate in
+    ``_cc_update`` then holds rates steady until the new path's own
+    signals are a full RTT old."""
+    move = st.active & (st.flow_path >= 0) & eligible & (t > st.route_step)
+    if cfg.policy == "sweep":
+        # only re-decision-capable cells may move; others stay pinned
+        # bit-for-bit even when sharing the trace with fatpaths/lcmp_r
+        cell_ok = jnp.asarray(False)
+        for p in cfg.sweep_policies:
+            if p in REDECIDE_POLICIES:
+                cell_ok = cell_ok | (ar.policy_code == policy_code(p))
+        move = move & cell_ok
+    elif cfg.policy not in REDECIDE_POLICIES:
+        return st
+
+    nonce = st.route_nonce + move.astype(jnp.int32)
+    fid = ar.f_id ^ selmod.fmix32(nonce.astype(jnp.uint32))
+    k_idx, new_path = decide(t, fid, ar.f_pair, st, ar, cfg)
+    changed = move & (k_idx >= 0) & (new_path != st.flow_path)
+    npad = jnp.maximum(new_path, 0)
+    qw = _path_queue_wait(st, ar, npad)
+    rtt = jnp.maximum(2 * ar.path_prop[npad] // cfg.dt_us, 1).astype(jnp.int32)
+    return dataclasses.replace(
+        st,
+        route_nonce=nonce,
+        flow_path=jnp.where(changed, new_path, st.flow_path),
+        rtt_steps=jnp.where(changed, rtt, st.rtt_steps),
+        route_step=jnp.where(changed, jnp.int32(0) + t, st.route_step),
+        extra_wait=jnp.where(changed, qw, st.extra_wait))

@@ -45,6 +45,11 @@ class ExpSpec:
     # signal-plane staleness axes (§7.3 ablations; both static/trace-level)
     sig_delay_scale: float = 1.0     # routing-signal propagation-delay scale
     ctrl_period_us: int = 100_000    # C_path re-install period (0 = frozen)
+    # mid-flow re-decision plane (static/trace-level axes; 0/0/1 = off,
+    # bit-identical to pinned-path routing — see engine.wants_redecide):
+    flowlet_gap_us: int = 0          # packet engine: flowlet idle gap
+    redecide_period_us: int = 0      # fluid engine: re-decision epoch
+    n_subflows: int = 1              # amp: subflows per flow (gen + metrics)
     select: Optional[object] = None  # optional SelectParams override
     pathq: Optional[object] = None   # optional PathQParams override
     congp: Optional[object] = None   # optional CongParams override
@@ -99,7 +104,8 @@ def make_flows(spec: ExpSpec, scen: scenarios.Scenario, table):
     return generate(table, cdfmod.WORKLOADS[spec.workload], spec.load,
                     spec.duration_us, pair_ids=fg_ids,
                     seed=spec.seed, cap_scale=spec.cap_scale,
-                    bg_pair_ids=bg_ids, bg_load=spec.bg_load)
+                    bg_pair_ids=bg_ids, bg_load=spec.bg_load,
+                    n_subflows=spec.n_subflows)
 
 
 def spec_to_cfg(spec: ExpSpec, scen: scenarios.Scenario) -> SimConfig:
@@ -115,6 +121,9 @@ def spec_to_cfg(spec: ExpSpec, scen: scenarios.Scenario) -> SimConfig:
                      cap_scale=spec.cap_scale,
                      sig_delay_scale=spec.sig_delay_scale,
                      ctrl_period_us=spec.ctrl_period_us,
+                     flowlet_gap_us=spec.flowlet_gap_us,
+                     redecide_period_us=spec.redecide_period_us,
+                     n_subflows=spec.n_subflows,
                      fail_sched=scen.fail_sched,
                      degrade_sched=scen.degrade_sched, **kw)
 

@@ -4,8 +4,10 @@ one jitted ``lax.scan`` — the fast backend of the multi-engine core
 ``repro.netsim.packet``).
 
 Model (standard fluid FCT-benchmark abstractions):
-- flows arrive (Poisson, CDF-sized), are routed ONCE at arrival (per-flow
-  stickiness — the paper never migrates active flows), start at line rate
+- flows arrive (Poisson, CDF-sized), are routed at arrival (per-flow
+  stickiness — the paper never migrates active flows; the FatPaths/lcmp_r
+  baselines may additionally re-decide on a ``redecide_period_us`` epoch
+  via the shared re-decision tick), start at line rate
   (RDMA), and share links max-min-proportionally: each link scales the
   flows through it by ``min(1, cap/offered)`` and a flow sends at its
   path-min factor — so per-link service never exceeds capacity.
@@ -51,10 +53,11 @@ import jax.numpy as jnp
 # Shared multi-engine core — re-exported so `fluid.X` keeps working for
 # every name that predates the engine split.
 from repro.netsim.engine import (  # noqa: F401
-    ENGINES, HIST, POLICIES, _NEVER, SimArrays, SimConfig, SimState,
-    _cc_update, _path_queue_wait, _reroute_dead, _route_arrivals,
-    attach_link_caps, build, ctrl_refresh, ctrl_tick, monitor_tick,
-    path_cong_view, policy_code, redte_tick)
+    ENGINES, HIST, POLICIES, POLICY_CODES, REDECIDE_POLICIES, _NEVER,
+    SimArrays, SimConfig, SimState, _cc_update, _path_queue_wait,
+    _reroute_dead, _route_arrivals, attach_link_caps, build, ctrl_refresh,
+    ctrl_tick, decide, monitor_tick, path_cong_view, policy_code,
+    redecide_tick, redte_tick, wants_redecide)
 
 name = "fluid"
 
@@ -84,6 +87,19 @@ def make_step(ar: SimArrays, cfg: SimConfig):
 
         # 2) arrivals + routing decisions (the herd batch)
         st = _route_arrivals(t, st, ar, cfg)
+
+        # 2b) mid-flow re-decision epoch (fluid eligibility is a timer:
+        # every redecide_period_us all re-decision-capable flows may
+        # re-hash). The gate is Python-level when the plane is off —
+        # nothing extra is traced — and a real lax.cond branch when on
+        # (t is unbatched under vmap, so off-epoch steps pay nothing).
+        if wants_redecide(cfg):
+            period = max(cfg.redecide_period_us // cfg.dt_us, 1)
+            st = jax.lax.cond(
+                (t % period) == 0,
+                lambda s: redecide_tick(t, s, ar, cfg,
+                                        jnp.ones_like(s.active)),
+                lambda s: s, st)
 
         # 3) offered load per link
         pf = st.flow_path

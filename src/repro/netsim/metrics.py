@@ -57,17 +57,47 @@ class FCTStats:
         return out
 
 
+def _collapse_subflows(flows: FlowSet, done, fct, mask):
+    """Aggregate per-subflow sim rows back to parent flows (amp): a
+    parent is done when ALL its subflows delivered, its FCT is the LAST
+    subflow's, its size/ideal use the summed bytes. ``mask`` (and
+    ``pair_id``/``fg``) are uniform within a parent by construction, so
+    any subflow's value represents the parent."""
+    sof = np.asarray(flows.subflow_of)
+    n = int(sof.max()) + 1 if len(sof) else 0
+    done_p = np.ones(n, bool)
+    np.logical_and.at(done_p, sof, done)
+    fct_p = np.zeros(n, np.float64)
+    np.maximum.at(fct_p, sof, np.where(done, fct, 0.0))
+    size_p = np.zeros(n, np.float64)
+    np.add.at(size_p, sof, flows.size_bytes)
+    pair_p = np.zeros(n, np.int32)
+    pair_p[sof] = flows.pair_id
+    mask_p = None
+    if mask is not None:
+        mask_p = np.zeros(n, bool)
+        mask_p[sof] = np.asarray(mask)
+        done_p = done_p & mask_p
+    return done_p, fct_p, size_p, pair_p, mask_p
+
+
 def fct_stats(final: SimState, table: PathTable, flows: FlowSet,
               cfg: SimConfig, mask=None) -> FCTStats:
     """Slowdown stats over all flows, or the ``mask``-selected subset
-    (e.g. ``flows.foreground`` for the measured pairs only)."""
+    (e.g. ``flows.foreground`` for the measured pairs only). Subflow
+    sets (``flows.subflow_of``) are scored at the parent level:
+    last-subflow completion time over the parent's full byte count."""
     done = np.asarray(final.done)
-    if mask is not None:
-        done = done & mask
     fct = np.asarray(final.fct_us)
     sizes = flows.size_bytes
-    prop = table.pair_ideal_prop[flows.pair_id].astype(np.float64)
-    cap = table.pair_ideal_cap[flows.pair_id] * 125.0 * cfg.cap_scale
+    pair = flows.pair_id
+    if getattr(flows, "subflow_of", None) is not None:
+        done, fct, sizes, pair, mask = _collapse_subflows(
+            flows, done, fct, mask)
+    elif mask is not None:
+        done = done & mask
+    prop = table.pair_ideal_prop[pair].astype(np.float64)
+    cap = table.pair_ideal_cap[pair] * 125.0 * cfg.cap_scale
     ideal = prop + sizes / cap
     sl = fct[done] / ideal[done]
     offered = int(mask.sum()) if mask is not None else len(done)

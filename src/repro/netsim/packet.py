@@ -38,7 +38,11 @@ queues, as one fully-batched jitted ``lax.scan`` over time slots:
   re-install (``engine.ctrl_tick``), arrival-time routing through
   ``select.select_egress``/baselines (``engine._route_arrivals``), flow
   stickiness, and lazy failover are the *same functions* the fluid
-  engine runs — the engines differ only in data-plane dynamics.
+  engine runs — the engines differ only in data-plane dynamics. The
+  mid-flow re-decision plane (``engine.redecide_tick``) is shared too,
+  but its *eligibility* is this engine's own: genuine flowlet idle gaps
+  (``last_tx`` + drained hop queues for >= ``flowlet_gap_us``), where
+  the fluid engine can only offer a timer epoch.
 
 FCT is measured by actual delivery: a flow completes when its last byte
 leaves its last hop queue; propagation (applied analytically, exactly as
@@ -55,7 +59,8 @@ import jax.numpy as jnp
 from repro.netsim import engine
 from repro.netsim.engine import (HIST, SimArrays, SimConfig, SimState,
                                  _cc_update, _reroute_dead, _route_arrivals,
-                                 ctrl_tick, monitor_tick, redte_tick)
+                                 ctrl_tick, monitor_tick, redecide_tick,
+                                 redte_tick, wants_redecide)
 from repro.netsim.paths import PathTable
 from repro.traffic.gen import FlowSet
 
@@ -70,6 +75,9 @@ class PacketState(SimState):
     fq: jnp.ndarray          # (F, H) f32 bytes queued at each hop egress
     credit: jnp.ndarray      # (F,) f32 pacing credit (fractional packets)
     delivered: jnp.ndarray   # (F,) f32 bytes delivered at destination
+    last_tx: jnp.ndarray     # (F,) i32 last slot the flow had bytes in
+                             # flight (flowlet idle-gap detection; only
+                             # maintained when the re-decision plane is on)
     pfc_pause: jnp.ndarray   # (L,) bool current XOFF state
     hist_pause: jnp.ndarray  # (L, HIST) bool pause ring (upstream reads
                              # it one backward link propagation late)
@@ -87,6 +95,10 @@ def build(table: PathTable, flows: FlowSet, cfg: SimConfig):
         fq=jnp.zeros((F, H), jnp.float32),
         credit=jnp.zeros((F,), jnp.float32),
         delivered=jnp.zeros((F,), jnp.float32),
+        last_tx=jnp.full((F,), 1 << 20, jnp.int32),  # sentinel: never sent
+                                                     # (t - last_tx < 0 so a
+                                                     # routed-but-quiet flow
+                                                     # is not flowlet-eligible)
         pfc_pause=jnp.zeros((L,), bool),
         hist_pause=jnp.zeros((L, HIST), bool),
     )
@@ -138,6 +150,20 @@ def make_step(ar: SimArrays, cfg: SimConfig):
 
         # 2) arrivals + routing decisions (shared herd batch)
         st = _route_arrivals(t, st, ar, cfg)
+
+        # 2b) flowlet re-hash (FatPaths semantics): a flow whose hop
+        # queues fully drained >= flowlet_gap_us ago may re-decide — the
+        # inter-flowlet idle gap guarantees no packets of the previous
+        # flowlet are still in flight, so switching paths cannot reorder.
+        # Eligibility is data-dependent (per flow, batched under vmap),
+        # so unlike the fluid engine's timer epoch this runs every slot
+        # when the plane is armed; the Python-level gate keeps the
+        # pinned-path program untouched otherwise.
+        if wants_redecide(cfg):
+            gap_steps = max(cfg.flowlet_gap_us // cfg.dt_us, 1)
+            idle = st.fq.sum(-1) <= 0.0
+            st = redecide_tick(t, st, ar, cfg,
+                               idle & ((t - st.last_tx) >= gap_steps))
 
         # flow/link geometry of the routed flows
         pf = st.flow_path
@@ -255,6 +281,15 @@ def make_step(ar: SimArrays, cfg: SimConfig):
             hist_u=st.hist_u.at[:, hslot].set(util),
             u_ewma=st.u_ewma * 0.99 + 0.01 * jnp.minimum(util, 1.0),
             serv_bytes=st.serv_bytes + served)
+
+        # 5b) flowlet clock: a flow is "transmitting" any slot it injects
+        # or still has bytes queued somewhere — the idle gap the flowlet
+        # detector measures starts when both go to zero. (inject covers
+        # the inject-and-cut-through-in-one-slot case.)
+        if wants_redecide(cfg):
+            busy = (inject > 0.0) | (st.fq.sum(-1) > 0.0)
+            st = dataclasses.replace(
+                st, last_tx=jnp.where(busy, jnp.int32(0) + t, st.last_tx))
 
         # 6) CC rate update from the RTT-delayed rings (shared laws)
         links_ok = geom_ok & st.active[:, None]

@@ -8,10 +8,14 @@ every cell. This engine instead:
 1. groups cells by their *static* key — everything that changes the
    traced program: scenario string (topology + schedules), simulation
    engine (fluid/packet, see ``repro.netsim.engine``), cc law,
-   cap_scale, duration, and the Select/PathQ/Cong parameter dataclasses.
+   cap_scale, duration, the re-decision-plane knobs
+   (``flowlet_gap_us``/``redecide_period_us``/``n_subflows``), and the
+   Select/PathQ/Cong parameter dataclasses.
    Policy is NOT part of the key: ``fluid`` dispatches it dynamically on
    the per-cell ``policy_code`` (cfg.policy == "sweep"), so an entire
-   load x policy figure grid is ONE group;
+   load x policy figure grid is ONE group — re-decision-capable policies
+   (``engine.REDECIDE_POLICIES``) included, their tick is gated per cell
+   by ``policy_code`` so pinned cells sharing the trace stay bit-exact;
 2. pads each group's per-cell arrays (flow tables to the max flow count,
    arrival buckets to the max per-step batch — both padding-invariant by
    construction, see ``fluid._route_arrivals``'s out-of-bounds-drop

@@ -50,6 +50,10 @@ class FlowSet:
     flow_id: np.ndarray      # (F,) uint32 (hash key)
     # foreground-pair membership (None == all foreground, legacy callers)
     fg_mask: Optional[np.ndarray] = None      # (F,) bool
+    # multi-subflow transports (amp): row -> parent-flow index. None for
+    # ordinary one-flow-per-row sets; when set, metrics score the PARENT
+    # (done = all subflows done, FCT = last subflow, size = sum).
+    subflow_of: Optional[np.ndarray] = None   # (F,) int32
     # dosing telemetry, one row per dosed pair (None for hand-built sets)
     dose_pair: Optional[np.ndarray] = None    # (P,) int32 pair ids
     dose_target: Optional[np.ndarray] = None  # (P,) float64 target bytes/us
@@ -112,6 +116,35 @@ def pair_dose_basis(table: PathTable, pid: int) -> float:
     return float(dose_bases(table, [pid])[0])
 
 
+def _fmix32_np(x: np.ndarray) -> np.ndarray:
+    """numpy twin of ``core.select.fmix32`` (MurmurHash3 finalizer)."""
+    x = x.astype(np.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> np.uint32(13))
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def _split_subflows(arrivals, sizes, pids, fids, fg, k: int):
+    """AMP-style multi-subflow expansion: each parent flow becomes ``k``
+    subflows of ``size/k`` arriving together, each with its own
+    deterministic hash key derived from the parent id (distinct keys are
+    what makes the subflows route independently under hash-based
+    policies). Returns the expanded arrays plus the ``subflow_of``
+    row -> parent map metrics use to score the parent at last-subflow
+    completion. Runs AFTER the rng draw sequence is complete, so the
+    ``n_subflows=1`` path stays bit-for-bit identical to legacy output."""
+    n = len(arrivals)
+    rep = lambda a: np.repeat(a, k)
+    sub_k = np.tile(np.arange(k, dtype=np.uint32), n)
+    sub_fid = _fmix32_np(rep(fids) ^ (sub_k * np.uint32(0x9E3779B9)))
+    sub_fid = np.where(sub_fid == 0, np.uint32(1), sub_fid)  # ids stay nonzero
+    return (rep(arrivals), rep(sizes) / k, rep(pids), sub_fid, rep(fg),
+            np.repeat(np.arange(n, dtype=np.int32), k))
+
+
 def _poisson_window(rng: np.random.Generator, lam: float,
                     duration_us: int) -> np.ndarray:
     """Arrival times of one Poisson process covering the FULL window.
@@ -130,7 +163,7 @@ def _poisson_window(rng: np.random.Generator, lam: float,
 def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
              pair_ids=None, seed: int = 0, max_flows: int = 200_000,
              cap_scale: float = 1.0, bg_pair_ids=None,
-             bg_load: float = 0.0) -> FlowSet:
+             bg_load: float = 0.0, n_subflows: int = 1) -> FlowSet:
     """Poisson arrivals at per-pair utilization ``load`` over
     ``duration_us`` (plus optional ``bg_load`` cross-traffic on
     ``bg_pair_ids``).
@@ -163,7 +196,8 @@ def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
     lams = {p: ld * base * 125.0 * cap_scale / mean_size
             for (p, ld, _), base in zip(doses, bases)}  # flows/us per pair
 
-    expect = sum(int(lams[p] * duration_us * 1.2) + 64 for p, _, _ in doses)
+    expect = (sum(int(lams[p] * duration_us * 1.2) + 64 for p, _, _ in doses)
+              * max(int(n_subflows), 1))
     if expect > max_flows:
         raise ValueError(
             f"offered load needs ~{expect} flows but max_flows={max_flows}: "
@@ -208,8 +242,17 @@ def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
     dose_target = np.array(
         [lams[p] * mean_size for p, _, _ in doses], np.float64)
 
+    # amp-style subflow expansion — after dose telemetry (byte rates are
+    # a parent-level property, preserved exactly by the equal split) and
+    # after every rng draw (the legacy draw sequence stays untouched)
+    subflow_of = None
+    if n_subflows > 1:
+        (arrivals, sizes, pids, fids, fg,
+         subflow_of) = _split_subflows(arrivals, sizes, pids, fids, fg,
+                                       int(n_subflows))
+
     return FlowSet(arrival_us=arrivals.astype(np.int64),
                    size_bytes=sizes, pair_id=pids.astype(np.int32),
-                   flow_id=fids, fg_mask=fg,
+                   flow_id=fids, fg_mask=fg, subflow_of=subflow_of,
                    dose_pair=dose_pair, dose_target=dose_target,
                    dose_real=dose_real)

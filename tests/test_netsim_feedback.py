@@ -26,6 +26,7 @@ def _state_two_flows(t, rtt):
         extra_wait=z,
         rtt_steps=jnp.full((2,), rtt, jnp.int32),
         route_step=jnp.asarray([0, t - 1], jnp.int32),
+        route_nonce=jnp.zeros(2, jnp.int32),
         last_dec=jnp.full((2,), -(1 << 20), jnp.int32),
         cc_alpha=z,
         cc_target=jnp.full((2,), 100.0, jnp.float32),
