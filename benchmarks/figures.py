@@ -34,9 +34,12 @@ import numpy as np
 from repro.core.cong import CongParams
 from repro.core.pathq import PathQParams
 from repro.core.select import SelectParams
-from repro.netsim.experiment import ExpSpec, build_world, spec_to_cfg
-from repro.netsim.metrics import fct_stats, per_pair_stats
+from repro.netsim.experiment import (ExpSpec, background_pair_ids,
+                                     build_world, spec_to_cfg,
+                                     traffic_pair_ids)
+from repro.netsim.metrics import fct_stats, per_pair_stats, phase_stats
 from repro.netsim.sweep import run_sweep
+from repro.traffic.sched import build as sched_build
 
 OUT = os.path.join(os.path.dirname(__file__), "out")
 Row = Tuple[str, float, str]
@@ -570,6 +573,129 @@ def fig_multipath(scale="default", sequential=False,
     _csv("fig_multipath.csv",
          "grid,engine,policy,p50,p99,completed,offered,completion_rate",
          csv)
+    return rows
+
+
+# ------------------------------- geo-grounded diurnal WAN (ROADMAP item 1)
+def fig_geo(scale="default", sequential=False, engine="both") -> List[Row]:
+    """[Geo diurnal] Planetary 20-DC WAN over one compressed 24 h cycle:
+    the ``geo`` scenario places real DC metros at their lat/lon (haul
+    delays = geodesic distance at ~0.67c, chained from 2000 km-class OTN
+    spans) and every advertised pair's offered load follows a diurnal
+    sinusoid phase-shifted by its source DC's timezone (longitude/15 deg)
+    and weighted by metro population, with one global flash crowd
+    mid-cycle (``ExpSpec.load_sched``). The population-heaviest ring
+    edge (fast-fat/slow-thin parallel hauls) is measured under that
+    breathing cross-traffic while its fattest haul's first span is
+    silently degraded to a tenth of capacity right at dawn — before the
+    first off-peak trough ends, so static nominal-capacity weighting is
+    wrong for the whole day, the regime the paper's cost repricing
+    targets — LCMP vs oblivious (ECMP), statically-weighted (WCMP) and
+    flowlet re-hash (FatPaths) baselines plus the lcmp_r re-decision
+    *ablation*, on BOTH engines (this suite ignores --engine). Rows
+    report slowdown percentiles **per diurnal phase** — peak / off-peak
+    / crossover segments of the measured pair's own schedule row —
+    because tracking the cycle, not winning one steady state, is the
+    figure of merit; derived ``fig_geo/ordering/<engine>/<phase>`` rows
+    assert LCMP p50/p99 at or below every baseline per phase with LCMP
+    completion above the floor (baselines below the floor report
+    survivor-biased percentiles — flattering to them — so they are
+    still compared; their completion rates ship in the CSV and the
+    survivorship flags), and ``fig_geo/ablation/<engine>/redecide``
+    reports what free periodic re-decision adds on top of LCMP."""
+    del engine
+    fig = "fig_geo"
+    dur = _DUR[scale]
+    # amp 0.45 keeps the trough hot enough that WCMP's 59% nominal-cap
+    # share of the degraded haul queues even off-peak, while the peak
+    # (2.6x the trough) still completes for LCMP
+    amp = 0.45
+    deg_ms = max(dur // 30_000, 10)
+    # flash lands INSIDE the evening peak (62% of the cycle for
+    # peak_h=20): bursting a crossover segment instead pushes baseline
+    # completion below the floor without testing peak tracking
+    flash_at_ms, flash_dur_ms = int(dur * 0.62) // 1000, max(dur // 10_000, 10)
+    top = f"geo:dcs=20,chords=10,deg_ms={deg_ms},deg_factor=0.1"
+    sched = (f"diurnal:amp={amp},segs=24,flash_at_ms={flash_at_ms},"
+             f"flash_dur_ms={flash_dur_ms},flash_mult=2")
+    pols = ["ecmp", "wcmp", "fatpaths", "lcmp_r", "lcmp"]
+
+    def spec(pol, eng):
+        knobs = {}
+        if pol in ("fatpaths", "lcmp_r"):
+            # both re-decision knobs armed; wants_redecide picks the
+            # engine-native one (fluid: timer epoch, packet: flowlet
+            # gap). The fluid epoch is the RedTE-style 100 ms control
+            # timescale — not faster: fluid re-decision pays no
+            # reordering cost, so a short epoch is a free oracle no
+            # hardware flowlet scheme gets
+            knobs = dict(flowlet_gap_us=1000,
+                         redecide_period_us=100_000)
+        return ExpSpec(topology=top, policy=pol, engine=eng, load=0.2,
+                       bg_load=0.1, duration_us=dur, seed=6, pairs="main",
+                       cap_scale=0.0625, load_sched=sched, **knobs)
+
+    specs = [spec(pol, eng) for eng in ("fluid", "packet") for pol in pols]
+    results, per_cell, summary = _sweep(fig, specs, sequential)
+
+    # phase labels come from the measured pair's OWN schedule row (the
+    # same arrays make_flows dosed with): peak >= 1 + amp/2 (the flash
+    # window lands here too), off-peak <= 1 - amp/2, crossover between
+    scen, table = build_world(top)
+    cfg = spec_to_cfg(specs[0], scen)
+    fg_ids = traffic_pair_ids(specs[0], scen, table)
+    sched_t, fg_rows, _ = sched_build(
+        sched, dur, table, scen, fg_ids,
+        background_pair_ids(table, fg_ids))
+    labels = ["peak" if v >= 1 + amp / 2 else
+              "offpeak" if v <= 1 - amp / 2 else "crossover"
+              for v in fg_rows[0]]
+    phases = list(dict.fromkeys(labels))
+
+    rows, csv, by = [summary], [], {}
+    for res in results:
+        s, st = res.spec, res.stats
+        derr = res.flows.dosing_error()
+        ph = phase_stats(res.final, table, res.flows, cfg, sched_t,
+                         labels, mask=res.flows.foreground)
+        for name, p in ph.items():
+            by[(s.engine, s.policy, name)] = p
+            csv.append(f"{s.engine},{s.policy},{name},{p.p50:.3f},"
+                       f"{p.p99:.3f},{_comp_cols(p)},{derr:.4f}")
+        rows.append((f"{fig}/{s.engine}/{s.policy}", per_cell,
+                     ";".join(f"{n}_p99={p.p99:.2f}"
+                              for n, p in ph.items())
+                     + f";crate={st.completion_rate:.4f}"
+                     + f";dose_err={derr:.4f}"))
+    # lcmp_r is an *ablation* of LCMP (same law + periodic re-decision;
+    # the fluid engine charges nothing for the re-hash, so it is LCMP
+    # made strictly stronger), not an external baseline — same split
+    # fig_multipath draws. Ordering gates on the true baselines; the
+    # re-decision delta gets its own ablation row per engine.
+    base = [p for p in pols if p not in ("lcmp", "lcmp_r")]
+    for eng in ("fluid", "packet"):
+        for name in phases:
+            lc = by[(eng, "lcmp", name)]
+            # the floor applies to LCMP only: a baseline that strands
+            # flows on the degraded haul reports survivor-biased
+            # percentiles, which can only flatter the baseline — beating
+            # them anyway is the conservative comparison, and voiding
+            # the row would let the baseline's failure erase LCMP's win.
+            # Baseline completion stays visible in the CSV and the
+            # per-suite survivorship flags.
+            ok = (lc.completion_rate >= COMPLETION_FLOOR) and all(
+                lc.p50 <= by[(eng, p, name)].p50
+                and lc.p99 <= by[(eng, p, name)].p99 for p in base)
+            rows.append((f"{fig}/ordering/{eng}/{name}", 0.0,
+                         f"lcmp_p50={lc.p50:.2f};lcmp_p99={lc.p99:.2f};"
+                         f"holds={ok}"))
+        rows.append((f"{fig}/ablation/{eng}/redecide", 0.0,
+                     ";".join(f"{n}_dp99={by[(eng, 'lcmp_r', n)].p99 - by[(eng, 'lcmp', n)].p99:+.2f}"
+                              for n in phases)))
+    rows.append(_completion_flags(fig, results))
+    _csv("fig_geo.csv",
+         "engine,policy,phase,p50,p99,completed,offered,"
+         "completion_rate,dose_err", csv)
     return rows
 
 

@@ -1,9 +1,14 @@
 """Wall-clock regression guard (``benchmarks.run --bench``).
 
-Times the three cost centers a refactor is most likely to slow down —
-world build + flow generation, the fluid scan, and the packet scan — at
-quick scale on the 8-DC testbed, plus the kernel microbenchmarks, and
-writes ``benchmarks/out/BENCH_netsim.json``. Against the committed
+Times the cost centers a refactor is most likely to slow down — world
+build + flow generation, the fluid scan, and the packet scan — at quick
+scale on the 8-DC testbed AND on the fig_geo operating point (the 20-DC
+geo world with a diurnal schedule, whose haversine/schedule/thinning
+layers are new cost centers), plus the kernel microbenchmarks. Writes
+``benchmarks/out/BENCH_netsim.json`` and mirrors it to the repo-root
+``BENCH_netsim.json`` — the root copy is *committed*, so the perf
+trajectory travels with the history instead of dying with each CI
+artifact. Against the committed
 ``benchmarks/BENCH_netsim.baseline.json`` any row slower than
 ``WARN_RATIO`` x baseline prints a ``BENCH-WARN`` line — a *soft* signal
 (CI boxes are noisy; the JSON artifact is the durable record), never a
@@ -28,15 +33,24 @@ from repro.netsim import engine as enginemod
 from repro.netsim.experiment import ExpSpec, build_experiment, build_world
 
 OUT = os.path.join(os.path.dirname(__file__), "out")
+ROOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_netsim.json")
 BASELINE = os.path.join(os.path.dirname(__file__),
                         "BENCH_netsim.baseline.json")
 WARN_RATIO = 1.3
 
 _SPEC = dict(topology="testbed8", load=0.4, duration_us=300_000, seed=1)
+# fig_geo quick operating point (shorter horizon: the guard times the
+# machinery — geo world build, schedule thinning, geo-scale scans — not
+# the full figure)
+_GEO_SPEC = dict(topology="geo:dcs=20,chords=10", load=0.43, bg_load=0.1,
+                 duration_us=60_000, seed=9, cap_scale=0.0625,
+                 load_sched="diurnal:amp=0.8,segs=24")
 
 
-def _scan_times(engine: str) -> Dict[str, float]:
-    spec = ExpSpec(engine=engine, policy="lcmp", **_SPEC)
+def _scan_times(engine: str, spec_kw: Dict = _SPEC,
+                prefix: str = "") -> Dict[str, float]:
+    spec = ExpSpec(engine=engine, policy="lcmp", **spec_kw)
     _, table, flows, cfg = build_experiment(spec)
     eng = enginemod.get_engine(engine)
     arrs, st = eng.build(table, flows, cfg)
@@ -48,8 +62,8 @@ def _scan_times(engine: str) -> Dict[str, float]:
         t0 = time.perf_counter()
         jax.block_until_ready(eng.run(arrs, st, cfg))
         runs.append((time.perf_counter() - t0) * 1e6)
-    return {f"{engine}_scan_compile": compile_us,
-            f"{engine}_scan_run": min(runs)}
+    return {f"{prefix}{engine}_scan_compile": compile_us,
+            f"{prefix}{engine}_scan_run": min(runs)}
 
 
 def collect() -> Dict[str, float]:
@@ -61,6 +75,14 @@ def collect() -> Dict[str, float]:
     rows["build_world_and_flows"] = (time.perf_counter() - t0) * 1e6
     rows.update(_scan_times("fluid"))
     rows.update(_scan_times("packet"))
+    # fig_geo cost centers: cold geo world (haversine + span expansion +
+    # path enumeration) with a diurnal schedule (thinned arrivals), then
+    # the fluid scan at geo scale
+    build_world.cache_clear()
+    t0 = time.perf_counter()
+    build_experiment(ExpSpec(engine="fluid", policy="lcmp", **_GEO_SPEC))
+    rows["geo_build_world_and_sched_flows"] = (time.perf_counter() - t0) * 1e6
+    rows.update(_scan_times("fluid", _GEO_SPEC, prefix="geo_"))
     for name, us, _ in kernel_bench.all_benches():
         rows[name] = us               # rows already carry the kernel/ tag
     return rows
@@ -77,9 +99,10 @@ def run_bench() -> None:
         "rows_us": rows,
     }
     path = os.path.join(OUT, "BENCH_netsim.json")
-    with open(path, "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
-    print(f"bench: wrote {path}")
+    for p in (path, ROOT):           # root copy is committed (trajectory)
+        with open(p, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"bench: wrote {p}")
     if not os.path.exists(BASELINE):
         print("bench: no committed baseline, skipping comparison")
         return

@@ -16,9 +16,9 @@ import argparse
 import sys
 import traceback
 
-# suites that pick their own engine(s): fidelity and fig_multipath run
-# both backends by design; kernels have no simulation engine at all
-_ENGINE_AGNOSTIC = ("fidelity", "fig_multipath", "kernels")
+# suites that pick their own engine(s): fidelity, fig_multipath and
+# fig_geo run both backends by design; kernels have no simulation engine
+_ENGINE_AGNOSTIC = ("fidelity", "fig_multipath", "fig_geo", "kernels")
 
 
 def main() -> None:
@@ -68,6 +68,7 @@ def main() -> None:
         "failover": figures.failover_bench,
         "fig_large": figures.fig_large,
         "fig_multipath": figures.fig_multipath,
+        "fig_geo": figures.fig_geo,
         "staleness": figures.staleness_ablation,
         "scenarios": figures.scenarios_bench,
         "fidelity": figures.fidelity_bench,

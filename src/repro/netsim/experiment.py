@@ -22,6 +22,7 @@ from repro.netsim import engine as enginemod
 from repro.netsim import fluid, metrics, paths, scenarios
 from repro.netsim.engine import SimConfig
 from repro.traffic import cdf as cdfmod
+from repro.traffic import sched as schedmod
 from repro.traffic.gen import generate
 
 
@@ -41,6 +42,11 @@ class ExpSpec:
     # no cross-traffic). A dynamic sweep axis like load/seed/pairs — it
     # only changes flow-table contents, never the compiled program.
     bg_load: float = 0.0
+    # per-pair piecewise load schedule (traffic/sched.py wire string,
+    # e.g. "diurnal:amp=0.8,segs=24"; "" = static scalar load). Another
+    # dynamic sweep axis: schedules reshape the flow tables only, so
+    # cells with different schedules share one compiled trace.
+    load_sched: str = ""
     cap_scale: float = 0.125
     # signal-plane staleness axes (§7.3 ablations; both static/trace-level)
     sig_delay_scale: float = 1.0     # routing-signal propagation-delay scale
@@ -101,11 +107,17 @@ def make_flows(spec: ExpSpec, scen: scenarios.Scenario, table):
     fg_ids = traffic_pair_ids(spec, scen, table)
     bg_ids = (background_pair_ids(table, fg_ids)
               if spec.bg_load > 0 else None)
+    kw = {}
+    if spec.load_sched:
+        sched_t, fg_rows, bg_rows = schedmod.build(
+            spec.load_sched, spec.duration_us, table, scen,
+            fg_ids, bg_ids or ())
+        kw = dict(sched_t=sched_t, load_rows=fg_rows, bg_rows=bg_rows)
     return generate(table, cdfmod.WORKLOADS[spec.workload], spec.load,
                     spec.duration_us, pair_ids=fg_ids,
                     seed=spec.seed, cap_scale=spec.cap_scale,
                     bg_pair_ids=bg_ids, bg_load=spec.bg_load,
-                    n_subflows=spec.n_subflows)
+                    n_subflows=spec.n_subflows, **kw)
 
 
 def spec_to_cfg(spec: ExpSpec, scen: scenarios.Scenario) -> SimConfig:

@@ -119,6 +119,36 @@ def fg_bg_stats(final: SimState, table: PathTable, flows: FlowSet,
             fct_stats(final, table, flows, cfg, mask=~fg))
 
 
+def phase_stats(final: SimState, table: PathTable, flows: FlowSet,
+                cfg: SimConfig, sched_t, seg_phase,
+                mask=None) -> Dict[str, FCTStats]:
+    """FCTStats per *schedule phase* for time-varying load runs
+    (``ExpSpec.load_sched``): each flow belongs to the schedule segment
+    its arrival falls in (the ``gen._poisson_sched`` mapping), and
+    ``seg_phase[k]`` labels segment ``k`` — e.g. ``"peak"`` /
+    ``"offpeak"`` / ``"crossover"`` from the measured pair's diurnal
+    row. Returns one FCTStats per distinct label, in first-appearance
+    order; compose with ``mask=flows.foreground`` to phase-split just
+    the measured pairs. This is the per-phase breakdown fig_geo
+    reports — a policy must track the cycle, not win one steady state.
+    """
+    sched_t = np.asarray(sched_t, np.int64)
+    seg_phase = list(seg_phase)
+    if len(seg_phase) != len(sched_t):
+        raise ValueError(f"seg_phase must label all {len(sched_t)} "
+                         f"segments, got {len(seg_phase)}")
+    seg = np.searchsorted(sched_t, np.asarray(flows.arrival_us),
+                          side="right") - 1
+    out: Dict[str, FCTStats] = {}
+    for ph in dict.fromkeys(seg_phase):
+        in_ph = np.isin(seg, [k for k, p in enumerate(seg_phase)
+                              if p == ph])
+        if mask is not None:
+            in_ph = in_ph & mask
+        out[ph] = fct_stats(final, table, flows, cfg, mask=in_ph)
+    return out
+
+
 def per_pair_stats(final: SimState, table: PathTable, flows: FlowSet,
                    cfg: SimConfig) -> Dict[int, FCTStats]:
     """FCTStats per traffic pair (keys: pair ids present in the flow

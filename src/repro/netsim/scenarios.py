@@ -55,6 +55,14 @@ class Scenario:
     max_hops: int = pathsmod.MAX_HOPS
     detour_delay: float = 1.5
     detour_hops: int = 1
+    # geography metadata (geo family): per-DC coordinates + metro
+    # population, indexed by DC node id. traffic/sched.py derives the
+    # diurnal timezone phase from dc_lon (longitude/15 deg per hour) and
+    # the population-weighted traffic matrix from dc_pop; None for
+    # synthetic scenarios (schedules then run unweighted, phase 0).
+    dc_lat: Optional[Tuple[float, ...]] = None
+    dc_lon: Optional[Tuple[float, ...]] = None
+    dc_pop: Optional[Tuple[float, ...]] = None
 
 
 _REGISTRY: Dict[str, Callable[..., Scenario]] = {}
@@ -251,6 +259,51 @@ def wan2000(dcs: int = 20, segs: int = 2, chords: int = 6, seed: int = 0,
 
 
 @register
+def geo(dcs: int = 20, chords: int = 10, seed: int = 0,
+        fail_ms: int = 0, deg_ms: int = 0,
+        deg_factor: float = 0.25) -> Scenario:
+    """Geography-grounded planetary WAN (ROADMAP item 1, MatchRDMA's
+    geo-distributed OTN regime): the first ``dcs`` metros of
+    ``topo.GEO_DCS`` at their real lat/lon, ring-ordered by longitude,
+    every haul's delay derived from geodesic distance at ~0.67c and
+    chained from 2000 km-class OTN spans. The main pair is the ring edge
+    with the largest population product, carrying three parallel
+    fast-fat/slow-thin hauls over progressively longer fiber routes.
+    Carries per-DC lat/lon/population metadata so ``ExpSpec.load_sched``
+    schedules get real timezone phase shifts and population-weighted
+    traffic matrices. ``fail_ms``/``deg_ms`` trip or silently degrade the
+    fattest main-pair haul's first span mid-run, as in wan2000."""
+    w = topomod.geo_wan(dcs=int(dcs), chords=int(chords), seed=int(seed))
+    max_hops = 2 * w.max_spans
+    ddelay, dhops = 3.0, 2 * w.max_spans - 1
+    dc_pairs = [(s, d) for s in w.dc_nodes for d in w.dc_nodes if s != d]
+    # same two-phase enumeration as wan2000: throwaway build over all DC
+    # pairs finds the advertised multi-path subset
+    table = pathsmod.build_path_table(w.topology, dc_pairs,
+                                      max_hops=max_hops, detour_delay=ddelay,
+                                      detour_hops=dhops)
+    adv = tuple((int(s), int(d)) for s, d, n in
+                zip(table.pair_src, table.pair_dst, table.pair_ncand)
+                if n >= 2)
+    fail_sched: Tuple[Tuple[int, int], ...] = ()
+    degrade_sched: Tuple[Tuple[int, int, float], ...] = ()
+    li = w.main_haul_links[0]      # fattest main-pair haul, first span
+    if int(fail_ms) > 0:
+        fail_sched = ((li, int(fail_ms) * 1000),)
+    if int(deg_ms) > 0:
+        at = int(deg_ms) * 1000
+        degrade_sched = ((li, at, float(deg_factor)),
+                         (li + 1, at, float(deg_factor)))  # both directions
+    return Scenario(f"geo:dcs={dcs},chords={chords},seed={seed}",
+                    w.topology, main_pair=w.main_pair,
+                    fail_sched=fail_sched, degrade_sched=degrade_sched,
+                    description=geo.__doc__, traffic_pairs=adv,
+                    max_hops=max_hops, detour_delay=ddelay,
+                    detour_hops=dhops, dc_lat=w.dc_lat, dc_lon=w.dc_lon,
+                    dc_pop=w.dc_pop)
+
+
+@register
 def jitter(base: str = "testbed8", frac: float = 0.2, seed: int = 0) -> Scenario:
     """Delay-asymmetry jitter over a base scenario's topology: every
     directed link's delay independently scaled by U[1-frac, 1+frac], so
@@ -263,4 +316,5 @@ def jitter(base: str = "testbed8", frac: float = 0.2, seed: int = 0) -> Scenario
                     degrade_sched=b.degrade_sched,
                     description=jitter.__doc__,
                     traffic_pairs=b.traffic_pairs, max_hops=b.max_hops,
-                    detour_delay=b.detour_delay, detour_hops=b.detour_hops)
+                    detour_delay=b.detour_delay, detour_hops=b.detour_hops,
+                    dc_lat=b.dc_lat, dc_lon=b.dc_lon, dc_pop=b.dc_pop)

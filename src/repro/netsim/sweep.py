@@ -97,8 +97,9 @@ class SweepReport:
 
 def static_key(spec: ExpSpec):
     """Everything that forces a separate trace/compile. Policy is
-    deliberately absent (dynamic dispatch); load/seed/workload/pairs only
-    change array *contents*."""
+    deliberately absent (dynamic dispatch); load/seed/workload/pairs/
+    bg_load/load_sched only change array *contents* — a whole diurnal
+    schedule grid (``ExpSpec.load_sched``) batches into one trace."""
     scen, _ = build_world(spec.topology)
     return (spec.topology, dataclasses.replace(
         spec_to_cfg(spec, scen), policy="sweep"))

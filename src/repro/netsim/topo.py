@@ -239,6 +239,184 @@ def wan_2000km(dcs: int = 20, segs: int = 2, chords: int = 6,
                     main_haul_links=tuple(main_first))
 
 
+# --------------------------------------------- geography-grounded WAN (geo)
+# Great-circle math + a planetary DC ring: the wan_2000km generator with
+# *declared* delay classes replaced by delays derived from real DC-metro
+# coordinates at fiber propagation speed. Long-haul fiber carries light at
+# ~0.67c (group index ~1.47), i.e. ~0.2009 km/us — the constant every WAN
+# RTT rule-of-thumb (~1 ms per 100 km one-way) comes from.
+EARTH_RADIUS_KM = 6371.0
+FIBER_KM_PER_US = 0.299792458 * 0.67          # ~0.2009 km/us at 0.67c
+GEO_SPAN_KM = 2000.0                          # OTN span class (wan2000's)
+# fiber routes are never great circles: declared route-stretch factors,
+# one per parallel main-pair haul (fat haul gets the direct route, the
+# thin ones progressively longer detour fibers — the testbed's
+# fast-fat/slow-thin heterogeneity, now geographically motivated) and one
+# for every ordinary ring/chord haul.
+GEO_MAIN_STRETCH = (1.0, 1.25, 1.5)
+GEO_RING_STRETCH = 1.1
+GEO_MAIN_CAPS = (200, 100, 40)                # Gbps, fattest first
+
+# DC metros: (name, lat, lon, metro population in millions). geo_wan
+# selects the first ``dcs`` entries, then ring-orders them by longitude
+# (the natural planetary ring). Populations drive the traffic-matrix
+# weights (traffic/sched.py), coordinates drive haul delays and the
+# diurnal timezone phase (longitude / 15 deg per hour).
+GEO_DCS = (
+    ("tokyo", 35.6762, 139.6503, 37.0),
+    ("delhi", 28.7041, 77.1025, 32.0),
+    ("shanghai", 31.2304, 121.4737, 28.0),
+    ("saopaulo", -23.5505, -46.6333, 22.0),
+    ("mexicocity", 19.4326, -99.1332, 22.0),
+    ("dhaka", 23.8103, 90.4125, 22.0),
+    ("cairo", 30.0444, 31.2357, 21.0),
+    ("beijing", 39.9042, 116.4074, 21.0),
+    ("mumbai", 19.0760, 72.8777, 21.0),
+    ("osaka", 34.6937, 135.5023, 19.0),
+    ("newyork", 40.7128, -74.0060, 19.0),
+    ("karachi", 24.8607, 67.0011, 16.0),
+    ("buenosaires", -34.6037, -58.3816, 15.0),
+    ("istanbul", 41.0082, 28.9784, 15.0),
+    ("lagos", 6.5244, 3.3792, 15.0),
+    ("london", 51.5074, -0.1278, 14.0),
+    ("losangeles", 34.0522, -118.2437, 13.0),
+    ("paris", 48.8566, 2.3522, 11.0),
+    ("johannesburg", -26.2041, 28.0473, 6.0),
+    ("singapore", 1.3521, 103.8198, 6.0),
+    ("sydney", -33.8688, 151.2093, 5.0),
+    ("seattle", 47.6062, -122.3321, 4.0),
+    ("frankfurt", 50.1109, 8.6821, 2.7),
+    ("dublin", 53.3498, -6.2603, 1.4),
+)
+
+
+def geodesic_km(lat1, lon1, lat2, lon2):
+    """Haversine great-circle distance in km (scalars or numpy arrays)."""
+    la1, lo1, la2, lo2 = (np.radians(np.asarray(x, np.float64))
+                          for x in (lat1, lon1, lat2, lon2))
+    h = (np.sin((la2 - la1) / 2.0) ** 2
+         + np.cos(la1) * np.cos(la2) * np.sin((lo2 - lo1) / 2.0) ** 2)
+    return 2.0 * EARTH_RADIUS_KM * np.arcsin(np.sqrt(np.clip(h, 0.0, 1.0)))
+
+
+def fiber_delay_us(dist_km: float, stretch: float = 1.0) -> int:
+    """One-way propagation delay of a fiber route ``stretch`` x the
+    geodesic, at ~0.67c. Floors at 1 us (metro-adjacent DCs)."""
+    return max(int(round(dist_km * stretch / FIBER_KM_PER_US)), 1)
+
+
+def geo_spans(dist_km: float, stretch: float = 1.0,
+              max_spans: int = 4) -> int:
+    """Number of 2000 km-class OTN spans a haul of this route length is
+    chained from (amplifier/regenerator sites), capped so candidate
+    enumeration hop budgets stay bounded — a capped haul just has
+    longer-than-class spans."""
+    return int(np.clip(np.ceil(dist_km * stretch / GEO_SPAN_KM),
+                       1, max_spans))
+
+
+@dataclasses.dataclass(frozen=True)
+class GeoWorld:
+    """A geography-grounded WAN plus the metadata the scenario and
+    traffic-schedule layers need (same role as WanWorld, with
+    coordinates/populations attached)."""
+    topology: Topology
+    main_pair: Tuple[int, int]
+    dc_nodes: Tuple[int, ...]
+    main_haul_links: Tuple[int, ...]  # first directed link per main haul
+    dc_name: Tuple[str, ...]
+    dc_lat: Tuple[float, ...]
+    dc_lon: Tuple[float, ...]
+    dc_pop: Tuple[float, ...]        # millions (traffic-matrix weights)
+    max_spans: int                   # per-haul span cap (hop budgets)
+
+
+def geo_wan(dcs: int = 20, chords: int = 10, seed: int = 0,
+            max_spans: int = 4) -> GeoWorld:
+    """Planetary WAN grounded in real geography: the first ``dcs``
+    entries of ``GEO_DCS`` ring-ordered by longitude, ring hauls between
+    longitude neighbors plus ``chords`` random shortcut hauls, every haul
+    delay derived from the geodesic distance at ~0.67c (``stretch`` x
+    for fiber-route detour) and chained from 2000 km-class OTN spans
+    (``geo_spans``). The main pair is the ring edge with the largest
+    population product, given three parallel hauls (200/100/40 Gbps at
+    progressively longer fiber routes — fast-fat/slow-thin). Capacities
+    still come from ``WAN_CAP_CLASSES``; *delays* are geography.
+
+    Deterministic under ``(dcs, chords, seed)``.
+    """
+    if not 4 <= dcs <= len(GEO_DCS):
+        raise ValueError(f"geo_wan needs 4 <= dcs <= {len(GEO_DCS)}, "
+                         f"got {dcs}")
+    sel = sorted(GEO_DCS[:dcs], key=lambda c: c[2])   # ring by longitude
+    names = tuple(c[0] for c in sel)
+    lat = tuple(float(c[1]) for c in sel)
+    lon = tuple(float(c[2]) for c in sel)
+    pop = tuple(float(c[3]) for c in sel)
+
+    def dist(a: int, b: int) -> float:
+        return float(geodesic_km(lat[a], lon[a], lat[b], lon[b]))
+
+    # main pair: the ring edge with the largest population product
+    ring = [(i, (i + 1) % dcs) for i in range(dcs)]
+    ma, mb = max(ring, key=lambda e: pop[e[0]] * pop[e[1]])
+
+    rng = np.random.default_rng(seed)
+    # hauls: (a, b, cap_gbps, one_way_delay_us, spans)
+    hauls = []
+    d_main = dist(ma, mb)
+    for cap, stretch in zip(GEO_MAIN_CAPS, GEO_MAIN_STRETCH):
+        hauls.append((ma, mb, cap, fiber_delay_us(d_main, stretch),
+                      geo_spans(d_main, stretch, max_spans)))
+    for a, b in ring:
+        if (a, b) == (ma, mb):
+            continue
+        d = dist(a, b)
+        hauls.append((a, b, int(rng.choice(WAN_CAP_CLASSES)),
+                      fiber_delay_us(d, GEO_RING_STRETCH),
+                      geo_spans(d, GEO_RING_STRETCH, max_spans)))
+    seen = {(a, b) for a, b, *_ in hauls}
+    placed, tries = 0, 0
+    while placed < chords and tries < 20 * chords:
+        tries += 1
+        a = int(rng.integers(0, dcs))
+        off = int(rng.choice([2, 3, max(dcs // 2, 4)]))
+        b = (a + off) % dcs
+        if a == b or (a, b) in seen or (b, a) in seen:
+            continue
+        seen.add((a, b))
+        d = dist(a, b)
+        hauls.append((a, b, int(rng.choice(WAN_CAP_CLASSES)),
+                      fiber_delay_us(d, GEO_RING_STRETCH),
+                      geo_spans(d, GEO_RING_STRETCH, max_spans)))
+        placed += 1
+    if placed < chords:
+        raise ValueError(
+            f"geo_wan(dcs={dcs}) could only place {placed} of {chords} "
+            "requested chords; lower chords= or raise dcs=")
+
+    # expand hauls into spans through dedicated segment nodes (the
+    # wan_2000km construction: a haul's first directed link index is
+    # 2 * its first span's row, _bidir interleaves fwd/rev)
+    edges: List[Link] = []
+    next_node = dcs
+    main_first: List[int] = []
+    for h, (a, b, cap, dl, segs) in enumerate(hauls):
+        seg_delay = max(dl // segs, 1)
+        nodes = [a] + [next_node + j for j in range(segs - 1)] + [b]
+        next_node += segs - 1
+        if h < len(GEO_MAIN_CAPS):
+            main_first.append(2 * len(edges))
+        for u, v in zip(nodes[:-1], nodes[1:]):
+            edges.append((u, v, cap, seg_delay))
+    t = Topology(f"geo-{dcs}dc-s{seed}", next_node, _bidir(edges))
+    return GeoWorld(topology=t, main_pair=(ma, mb),
+                    dc_nodes=tuple(range(dcs)),
+                    main_haul_links=tuple(main_first),
+                    dc_name=names, dc_lat=lat, dc_lon=lon, dc_pop=pop,
+                    max_spans=max_spans)
+
+
 def delay_jitter(base: Topology, frac: float = 0.2, seed: int = 0) -> Topology:
     """Apply asymmetric delay jitter: every *directed* link's propagation
     delay is independently scaled by U[1-frac, 1+frac], so forward and

@@ -29,6 +29,14 @@ so benchmarks can assert dosing accuracy instead of trusting it.
 are dosed at ``bg_load`` while the requested pairs run at ``load``, and
 ``FlowSet.fg_mask`` marks which flows belong to the measured foreground
 set (see ``metrics.fg_bg_stats``).
+
+``sched_t``/``load_rows``/``bg_rows`` promote each pair's dose from a
+static scalar to a piecewise-constant **load schedule** (diurnal sine
+curves phase-shifted by DC timezone, flash crowds, traffic-matrix
+shifts — built by ``traffic.sched``). Non-constant rows run a
+non-homogeneous Poisson process by thinning; constant rows take the
+legacy homogeneous draw path bit-for-bit, so the schedule machinery is
+a strict superset of the scalar interface.
 """
 from __future__ import annotations
 
@@ -160,13 +168,52 @@ def _poisson_window(rng: np.random.Generator, lam: float,
     return arr[arr < duration_us * 1e0]
 
 
+def _poisson_sched(rng: np.random.Generator, lam_row: np.ndarray,
+                   sched_t: np.ndarray, duration_us: int) -> np.ndarray:
+    """Arrival times of a piecewise-constant non-homogeneous Poisson
+    process: rate ``lam_row[k]`` (flows/us) over segment ``k`` starting
+    at ``sched_t[k]``.
+
+    Implemented by thinning: draw a homogeneous process at ``max(lam)``
+    (the exact legacy ``_poisson_window`` draws), then accept each
+    arrival with probability ``lam(t) / max(lam)`` using ONE uniform
+    draw per candidate. A *constant* row takes the homogeneous path with
+    zero extra draws — that branch is what keeps constant-schedule
+    output bit-for-bit identical to the legacy scalar-``load`` path.
+    All-zero rows draw nothing."""
+    lam_max = float(lam_row.max())
+    if lam_max <= 0.0:
+        return np.zeros(0, np.float64)
+    if float(lam_row.min()) == lam_max:    # constant: legacy draws exactly
+        return _poisson_window(rng, lam_max, duration_us)
+    arr = _poisson_window(rng, lam_max, duration_us)
+    seg = np.searchsorted(sched_t, arr, side="right") - 1
+    keep = rng.random(len(arr)) * lam_max < lam_row[seg]
+    return arr[keep]
+
+
 def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
              pair_ids=None, seed: int = 0, max_flows: int = 200_000,
              cap_scale: float = 1.0, bg_pair_ids=None,
-             bg_load: float = 0.0, n_subflows: int = 1) -> FlowSet:
+             bg_load: float = 0.0, n_subflows: int = 1,
+             sched_t=None, load_rows=None, bg_rows=None) -> FlowSet:
     """Poisson arrivals at per-pair utilization ``load`` over
     ``duration_us`` (plus optional ``bg_load`` cross-traffic on
     ``bg_pair_ids``).
+
+    ``sched_t``/``load_rows``/``bg_rows`` (optional, built by
+    ``traffic.sched.build``) promote the per-pair dose from a scalar to
+    a **piecewise-constant load schedule**: ``sched_t`` is a shared
+    (K,) grid of segment start times (``sched_t[0] == 0``, ascending)
+    and ``load_rows[i, k]`` / ``bg_rows[j, k]`` the load *multiplier* of
+    foreground pair ``pair_ids[i]`` / background pair ``bg_pair_ids[j]``
+    over segment ``k`` — the effective utilization of pair ``i`` during
+    segment ``k`` is ``load * load_rows[i, k]``. Arrivals follow a
+    non-homogeneous Poisson process via thinning (``_poisson_sched``);
+    a pair whose row is constant takes the exact legacy homogeneous
+    draw path, so all-ones rows reproduce scalar-``load`` output
+    **bit-for-bit**. Dose telemetry targets become the schedule's
+    time-average byte-rate.
 
     ``cap_scale`` must match the simulator's capacity scale so the
     offered byte rate targets the *simulated* capacities. Raises
@@ -180,11 +227,38 @@ def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
     pair_ids = np.asarray(pair_ids, np.int32)
     bg_pair_ids = (np.zeros(0, np.int32) if bg_pair_ids is None or bg_load <= 0
                    else np.asarray(bg_pair_ids, np.int32))
-    bg_pair_ids = bg_pair_ids[~np.isin(bg_pair_ids, pair_ids)]
+    keep_bg = ~np.isin(bg_pair_ids, pair_ids)
+    bg_pair_ids = bg_pair_ids[keep_bg]
+
+    if sched_t is None:
+        sched_t = np.zeros(1, np.int64)
+        load_rows = np.ones((len(pair_ids), 1), np.float64)
+        bg_rows = np.ones((len(bg_pair_ids), 1), np.float64)
+    else:
+        sched_t = np.asarray(sched_t, np.int64)
+        if sched_t[0] != 0 or np.any(np.diff(sched_t) <= 0):
+            raise ValueError("sched_t must start at 0 and be strictly "
+                             "ascending")
+        load_rows = np.asarray(load_rows, np.float64)
+        if bg_rows is None or len(bg_pair_ids) == 0:
+            bg_rows = np.ones((len(bg_pair_ids), len(sched_t)))
+        else:            # rows align with the caller's UNfiltered bg list
+            bg_rows = np.asarray(bg_rows, np.float64)[keep_bg]
+        if load_rows.shape != (len(pair_ids), len(sched_t)) or \
+                bg_rows.shape != (len(bg_pair_ids), len(sched_t)):
+            raise ValueError(
+                f"schedule rows must be (pairs, {len(sched_t)}): got "
+                f"{load_rows.shape} fg / {bg_rows.shape} bg")
+        if load_rows.min(initial=0.0) < 0 or bg_rows.min(initial=0.0) < 0:
+            raise ValueError("schedule rows must be non-negative")
+    # per-segment durations (last segment runs to the end of the window)
+    seg_dur = np.diff(np.append(sched_t, duration_us)).astype(np.float64)
 
     mean_size = cdf.mean()
-    doses = [(int(p), float(load), True) for p in pair_ids] + \
-            [(int(p), float(bg_load), False) for p in bg_pair_ids]
+    doses = [(int(p), float(load) * load_rows[i], True)
+             for i, p in enumerate(pair_ids)] + \
+            [(int(p), float(bg_load) * bg_rows[j], False)
+             for j, p in enumerate(bg_pair_ids)]
     # first-hop sharing is split WITHIN each dose group: the foreground
     # pairs divide capacity among themselves (all-to-all stays sane) but
     # keep their full class against the background set — cross-traffic is
@@ -193,11 +267,15 @@ def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
     bases = np.concatenate([
         dose_bases(table, pair_ids),
         dose_bases(table, bg_pair_ids) if len(bg_pair_ids) else np.zeros(0)])
-    lams = {p: ld * base * 125.0 * cap_scale / mean_size
-            for (p, ld, _), base in zip(doses, bases)}  # flows/us per pair
+    # (K,) flows/us rate row per pair; lam_avg is its time average —
+    # for a constant row this is the legacy scalar lam exactly
+    lams = {p: row * base * 125.0 * cap_scale / mean_size
+            for (p, row, _), base in zip(doses, bases)}
+    lam_avg = {p: float((lams[p] * seg_dur).sum()) / duration_us
+               for p, _, _ in doses}
 
-    expect = (sum(int(lams[p] * duration_us * 1.2) + 64 for p, _, _ in doses)
-              * max(int(n_subflows), 1))
+    expect = (sum(int(lam_avg[p] * duration_us * 1.2) + 64
+                  for p, _, _ in doses) * max(int(n_subflows), 1))
     if expect > max_flows:
         raise ValueError(
             f"offered load needs ~{expect} flows but max_flows={max_flows}: "
@@ -205,13 +283,18 @@ def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
             f"Raise max_flows (>= {expect}) or chunk the run into shorter "
             f"duration_us segments.")
 
-    if len(doses) == 1 and doses[0][2]:
-        # single foreground pair: keep the exact legacy draw sequence
-        # (gaps -> sizes -> pair assignment -> ids from one rng stream) so
-        # every pre-existing single-pair experiment, tolerance band, and
-        # tuned acceptance test stays bit-for-bit reproducible.
+    row0 = doses[0][1] if doses else np.zeros(1)
+    if len(doses) == 1 and doses[0][2] and \
+            float(row0.min()) == float(row0.max()) and row0.max() > 0:
+        # single foreground pair with a constant (or absent) schedule:
+        # keep the exact legacy draw sequence (gaps -> sizes -> pair
+        # assignment -> ids from one rng stream) so every pre-existing
+        # single-pair experiment, tolerance band, and tuned acceptance
+        # test stays bit-for-bit reproducible.
         pid = doses[0][0]
-        arrivals = _poisson_window(rng, lams[pid], duration_us)
+        # use the row's rate, NOT lam_avg: (lam * T) / T can differ from
+        # lam by 1 ulp, which would desync the exponential draw stream
+        arrivals = _poisson_window(rng, float(lams[pid].max()), duration_us)
         n = len(arrivals)
         sizes = cdf.sample(rng, n)
         pids = pair_ids[rng.integers(0, len(pair_ids), n)]
@@ -220,8 +303,8 @@ def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
         dose_real = np.array([sizes.sum() / duration_us])
     else:
         chunks = []
-        for p, ld, is_fg in doses:
-            arr = _poisson_window(rng, lams[p], duration_us)
+        for p, _, is_fg in doses:
+            arr = _poisson_sched(rng, lams[p], sched_t, duration_us)
             chunks.append((p, is_fg, arr, cdf.sample(rng, len(arr))))
         # realized byte-rates straight off the per-pair chunks (no
         # per-flow remapping of the merged table needed)
@@ -239,8 +322,8 @@ def generate(table: PathTable, cdf: SizeCDF, load: float, duration_us: int,
         fids = rng.integers(1, 1 << 32, len(arrivals), dtype=np.uint32)
 
     dose_pair = np.array([p for p, _, _ in doses], np.int32)
-    dose_target = np.array(
-        [lams[p] * mean_size for p, _, _ in doses], np.float64)
+    dose_target = np.array(    # schedule time-average byte-rate per pair
+        [lam_avg[p] * mean_size for p, _, _ in doses], np.float64)
 
     # amp-style subflow expansion — after dose telemetry (byte rates are
     # a parent-level property, preserved exactly by the equal split) and

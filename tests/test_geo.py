@@ -1,0 +1,197 @@
+"""Geo-grounded WAN contracts: great-circle math properties (symmetry,
+identity, triangle inequality — via hypothesis, stub-backed when the real
+package is absent), the Beijing-Frankfurt ground-truth distance and its
+mapping to span delays at ~0.67c, geo_wan generator invariants and
+determinism, the geo scenario's metadata plumbing, and the registry pin
+that freezes the wire-format names (scenario families, schedule families,
+policy codes) sweep cell keys are built from."""
+from collections import deque
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.netsim import paths, scenarios, topo
+from repro.netsim.engine import POLICY_CODES
+from repro.netsim.experiment import build_world
+from repro.traffic import sched
+
+# ---------------------------------------------------- geodesic properties
+_lat = st.floats(min_value=-90.0, max_value=90.0)
+_lon = st.floats(min_value=-180.0, max_value=180.0)
+
+# half Earth's circumference: no two surface points are farther apart
+_HALF_CIRCUMFERENCE_KM = np.pi * topo.EARTH_RADIUS_KM
+
+
+@settings(max_examples=200, deadline=None)
+@given(_lat, _lon, _lat, _lon)
+def test_geodesic_symmetry_and_bounds(la1, lo1, la2, lo2):
+    d_ab = float(topo.geodesic_km(la1, lo1, la2, lo2))
+    d_ba = float(topo.geodesic_km(la2, lo2, la1, lo1))
+    assert d_ab == d_ba                       # haversine is symmetric
+    assert 0.0 <= d_ab <= _HALF_CIRCUMFERENCE_KM + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(_lat, _lon)
+def test_geodesic_self_distance_zero(la, lo):
+    assert float(topo.geodesic_km(la, lo, la, lo)) == 0.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(_lat, _lon, _lat, _lon, _lat, _lon)
+def test_geodesic_triangle_inequality(la1, lo1, la2, lo2, la3, lo3):
+    d_ac = float(topo.geodesic_km(la1, lo1, la3, lo3))
+    d_ab = float(topo.geodesic_km(la1, lo1, la2, lo2))
+    d_bc = float(topo.geodesic_km(la2, lo2, la3, lo3))
+    # float slack: each haversine is exact to ~1e-9 relative
+    assert d_ac <= d_ab + d_bc + 1e-6
+
+
+def _dc(name):
+    return next(c for c in topo.GEO_DCS if c[0] == name)
+
+
+def test_beijing_frankfurt_ground_truth():
+    """Beijing-Frankfurt is ~7,800 km great-circle (the ISSUE's anchor);
+    the derived one-way delay at ~0.67c lands where the WAN
+    rule-of-thumb says (~1 ms per 200 km, i.e. ~39 ms one-way)."""
+    _, la1, lo1, _ = _dc("beijing")
+    _, la2, lo2, _ = _dc("frankfurt")
+    d = float(topo.geodesic_km(la1, lo1, la2, lo2))
+    assert abs(d - 7800.0) / 7800.0 < 0.02
+    delay = topo.fiber_delay_us(d)
+    assert delay == int(round(d / topo.FIBER_KM_PER_US))
+    assert 36_000 < delay < 41_000            # ~38.7 ms one-way
+    # route stretch scales delay linearly; spans chain in 2000 km classes
+    assert topo.fiber_delay_us(d, 1.5) == int(round(1.5 * d / topo.FIBER_KM_PER_US))
+    assert topo.geo_spans(d, max_spans=8) == int(np.ceil(d / 2000.0))
+    assert topo.geo_spans(d, max_spans=4) == 4       # cap binds
+    assert topo.fiber_delay_us(0.0) == 1             # metro floor
+
+
+def test_fiber_speed_constant_is_two_thirds_c():
+    assert np.isclose(topo.FIBER_KM_PER_US, 0.299792458 * 0.67)
+
+
+# ---------------------------------------------------- geo_wan invariants
+def _connected(t: topo.Topology) -> bool:
+    adj = {}
+    for s, d, _, _ in t.links:
+        adj.setdefault(s, []).append(d)
+    seen, q = {0}, deque([0])
+    while q:
+        for nb in adj.get(q.popleft(), []):
+            if nb not in seen:
+                seen.add(nb)
+                q.append(nb)
+    return len(seen) == t.num_nodes
+
+
+@pytest.mark.parametrize("dcs,chords", [(20, 10), (8, 4), (24, 12)])
+def test_geo_wan_generator_invariants(dcs, chords):
+    w = topo.geo_wan(dcs=dcs, chords=chords, seed=0)
+    t = w.topology
+    assert _connected(t)
+    assert w.dc_nodes == tuple(range(dcs))
+    assert len(w.dc_lat) == len(w.dc_lon) == len(w.dc_pop) == dcs
+    # ring-ordered by longitude over the dcs most populous metros
+    assert list(w.dc_lon) == sorted(w.dc_lon)
+    assert set(w.dc_name) == {c[0] for c in topo.GEO_DCS[:dcs]}
+    # main pair: the ring edge maximizing the population product
+    ma, mb = w.main_pair
+    assert (mb - ma) % dcs in (1, dcs - 1)
+    ring_prods = [w.dc_pop[i] * w.dc_pop[(i + 1) % dcs] for i in range(dcs)]
+    assert w.dc_pop[ma] * w.dc_pop[mb] == max(ring_prods)
+    # three parallel main hauls, fattest first; END-TO-END haul delay
+    # rises with route stretch (fast-fat / slow-thin) — per-link span
+    # delays need not be monotone (longer routes chain MORE spans)
+    d_main = topo.geodesic_km(w.dc_lat[ma], w.dc_lon[ma],
+                              w.dc_lat[mb], w.dc_lon[mb])
+    caps = [t.links[li][2] for li in w.main_haul_links]
+    assert tuple(caps) == topo.GEO_MAIN_CAPS
+    totals = []
+    for stretch, li in zip(topo.GEO_MAIN_STRETCH, w.main_haul_links):
+        spans = topo.geo_spans(d_main, stretch, w.max_spans)
+        seg = max(topo.fiber_delay_us(d_main, stretch) // spans, 1)
+        assert t.links[li][3] == seg
+        totals.append(seg * spans)
+    assert totals == sorted(totals) and len(set(totals)) == 3
+    for _, _, cap, dl in t.links:
+        assert cap in topo.WAN_CAP_CLASSES
+        assert dl >= 1
+    # deterministic under (dcs, chords, seed); seed changes the chords
+    again = topo.geo_wan(dcs=dcs, chords=chords, seed=0)
+    assert again.topology.links == t.links
+    other = topo.geo_wan(dcs=dcs, chords=chords, seed=1)
+    assert other.topology.links != t.links
+
+
+def test_geo_wan_rejects_bad_params():
+    with pytest.raises(ValueError, match="4 <= dcs"):
+        topo.geo_wan(dcs=3)
+    with pytest.raises(ValueError, match="4 <= dcs"):
+        topo.geo_wan(dcs=len(topo.GEO_DCS) + 1)
+    with pytest.raises(ValueError, match="chords"):
+        topo.geo_wan(dcs=4, chords=50)
+
+
+def test_geo_scenario_metadata_and_schedules():
+    """The geo scenario advertises DC pairs only, threads the lat/lon/pop
+    metadata the diurnal schedule builder keys on, and its fail/degrade
+    schedules hit the fat main haul's first span (both directions for
+    degrade) — the wan2000 conventions."""
+    scen, table = build_world("geo:dcs=20,chords=10")
+    w = topo.geo_wan(dcs=20, chords=10, seed=0)
+    assert scen.main_pair == w.main_pair
+    assert scen.dc_lat == w.dc_lat and scen.dc_lon == w.dc_lon
+    assert scen.dc_pop == w.dc_pop
+    assert scen.max_hops == 2 * w.max_spans
+    assert all(s < 20 and d < 20 for s, d in scen.traffic_pairs)
+    assert (table.pair_ncand >= 2).all()
+    m = table.pair_index()[scen.main_pair]
+    caps = table.path_cap[table.pair_cand[m, : table.pair_ncand[m]]]
+    assert caps.max() >= 200 and caps.min() <= 40
+    deg = scenarios.get("geo:dcs=20,chords=10,deg_ms=50,deg_factor=0.3")
+    assert deg.degrade_sched == ((w.main_haul_links[0], 50_000, 0.3),
+                                 (w.main_haul_links[0] + 1, 50_000, 0.3))
+    fail = scenarios.get("geo:dcs=20,chords=10,fail_ms=80")
+    assert fail.fail_sched == ((w.main_haul_links[0], 80_000),)
+    # jitter wrapper preserves the geo metadata passthrough
+    j = scenarios.get("jitter:base=geo,frac=0.1")
+    assert j.dc_pop == w.dc_pop and j.dc_lon == w.dc_lon
+
+
+def test_geo_paths_survive_hop_budget():
+    """Span chaining must not starve candidate enumeration: the main
+    pair keeps all three parallel hauls as first-hop-distinct
+    candidates under the scenario's max_hops budget."""
+    scen, table = build_world("geo:dcs=20,chords=10")
+    m = table.pair_index()[scen.main_pair]
+    assert table.pair_ncand[m] >= 3
+    cands = table.pair_cand[m][: table.pair_ncand[m]]
+    firsts = table.path_first[cands]
+    assert len(set(firsts.tolist())) == len(cands)
+
+
+# ------------------------------------------------------- registry pins
+def test_registry_wire_format_pinned():
+    """Scenario names, schedule families and policy codes are wire
+    format: sweep cell keys, benchmark CSV rows and pinned acceptance
+    thresholds are built from them. Extending any registry is fine —
+    renaming or renumbering an existing entry silently invalidates
+    recorded results, so this pin must be updated consciously."""
+    assert scenarios.names() == [
+        "bso13", "bso13_degrade", "geo", "jitter", "longhaul_mesh",
+        "parallel", "staleness", "testbed8", "testbed8_failover",
+        "wan2000"]
+    assert sched.FAMILIES == ("const", "diurnal", "flash")
+    assert POLICY_CODES == {
+        "lcmp": 0, "lcmp_w": 1, "ecmp": 2, "ucmp": 3, "wcmp": 4,
+        "redte": 5, "fatpaths": 6, "amp": 7, "lcmp_r": 8}
+    # geo's default parameterization is part of the pin: fig_geo rows
+    # embed it, and the scenario string is the sweep static key
+    scen = scenarios.get("geo")
+    assert scen.name == "geo:dcs=20,chords=10,seed=0"

@@ -1,0 +1,266 @@
+"""Traffic-plane schedule contracts: the per-pair piecewise load
+schedule (``traffic.sched`` + ``gen._poisson_sched``) realizes its
+time-integral within Poisson tolerance (property-tested), a constant
+schedule reproduces the legacy scalar-load rng draw sequence
+**bit-for-bit** (FlowSet level for every registered scenario, engine
+level for both backends, and against the pinned single-pair numbers),
+schedules batch as a dynamic sweep axis, and the diurnal/flash shapes
+follow their geography (timezone phase from source longitude, flash
+windows, traffic-matrix shifts)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.netsim import scenarios, sweep
+from repro.netsim.experiment import (ExpSpec, background_pair_ids,
+                                     build_world, make_flows,
+                                     traffic_pair_ids)
+from repro.traffic import cdf as cdfmod
+from repro.traffic import sched
+from repro.traffic.gen import generate, pair_dose_basis
+
+WS = cdfmod.WORKLOADS["websearch"]
+
+
+def _main_pid(topology):
+    scen, table = build_world(topology)
+    return scen, table, table.pair_index()[scen.main_pair]
+
+
+# ---------------------------------------------- integral-tracking property
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=3.0),
+                min_size=2, max_size=8),
+       st.integers(min_value=0, max_value=9))
+def test_realized_rate_tracks_schedule_integral(mults, seed):
+    """For an arbitrary non-negative multiplier row, the realized
+    arrival count per segment is Poisson(lam_k * seg_dur_k) — within
+    normal-approximation tolerance per segment AND in aggregate. This is
+    the property that catches thinning bugs (wrong segment lookup,
+    biased accept draws) regardless of the schedule's shape."""
+    dur = 400_000
+    scen, table, main = _main_pid("testbed8")
+    K = len(mults)
+    sched_t = (np.arange(K, dtype=np.int64) * dur) // K
+    rows = np.array([mults], np.float64)
+    fs = generate(table, WS, 0.3, dur, pair_ids=[main], seed=seed,
+                  cap_scale=0.125, sched_t=sched_t, load_rows=rows)
+    # lam per segment from the generator's own telemetry: dose_target is
+    # the time-average byte-rate, so lam_k = mult_k * lam_unit
+    seg_dur = np.diff(np.append(sched_t, dur)).astype(np.float64)
+    avg_mult = float((rows[0] * seg_dur).sum()) / dur
+    basis = pair_dose_basis(table, main)        # 6 x 40G on testbed8
+    assert np.isclose(fs.dose_target[0],
+                      avg_mult * 0.3 * basis * 125.0 * 0.125)
+    lam_unit = 0.3 * basis * 125.0 * 0.125 / WS.mean()
+    seg = np.searchsorted(sched_t, fs.arrival_us, side="right") - 1
+    for k in range(K):
+        expect = mults[k] * lam_unit * seg_dur[k]
+        got = int((seg == k).sum())
+        # 6-sigma normal band around the Poisson mean (+5 floors the
+        # band so near-zero segments admit their rare stragglers)
+        assert abs(got - expect) <= 6.0 * np.sqrt(expect) + 5.0, \
+            (k, got, expect)
+    # byte-rate telemetry: realized tracks the schedule time-integral
+    # (heavy-tailed sizes => distribution-level bound, as elsewhere)
+    n, e = fs.num_flows, avg_mult * lam_unit * dur
+    assert abs(n - e) <= 6.0 * np.sqrt(e) + 5.0
+    if fs.dose_target[0] > 0:
+        assert np.isclose(fs.dose_real[0],
+                          fs.size_bytes.sum() / dur)
+
+
+def test_all_zero_schedule_draws_nothing():
+    scen, table, main = _main_pid("testbed8")
+    fs = generate(table, WS, 0.3, 100_000, pair_ids=[main], seed=0,
+                  cap_scale=0.125, sched_t=np.array([0, 50_000]),
+                  load_rows=np.zeros((1, 2)))
+    assert fs.num_flows == 0 and fs.dose_target[0] == 0.0
+
+
+# ------------------------------------------ constant == scalar, bit-for-bit
+def test_single_pair_const_schedule_matches_pinned_sequence():
+    """The pre-PR pinned draw sequence (test_wan_large pins the scalar
+    path) must fall out of the schedule path too: a constant row takes
+    the legacy homogeneous branch with ZERO extra rng draws."""
+    scen, table, main = _main_pid("testbed8")
+    K = 6
+    sched_t = (np.arange(K, dtype=np.int64) * 300_000) // K
+    fs = generate(table, WS, 0.3, 300_000, pair_ids=[main], seed=0,
+                  cap_scale=0.125, sched_t=sched_t,
+                  load_rows=np.ones((1, K)))
+    assert fs.num_flows == 1389
+    assert fs.arrival_us[:3].tolist() == [142, 356, 360]
+    assert fs.flow_id[:3].tolist() == [2132099435, 1045437217, 929310042]
+
+
+def _flowsets_equal(a, b):
+    assert np.array_equal(a.arrival_us, b.arrival_us)
+    assert np.array_equal(a.size_bytes, b.size_bytes)
+    assert np.array_equal(a.pair_id, b.pair_id)
+    assert np.array_equal(a.flow_id, b.flow_id)
+    assert np.array_equal(a.foreground, b.foreground)
+    assert np.allclose(a.dose_target, b.dose_target)
+    assert np.allclose(a.dose_real, b.dose_real)
+
+
+@pytest.mark.parametrize("name", scenarios.names())
+def test_const_schedule_is_bitwise_legacy_every_scenario(name):
+    """`load_sched="const"` == no schedule at all, for every registered
+    scenario, foreground-only AND with background cross-traffic (the
+    multi-pair path where constant rows must bypass thinning)."""
+    base = ExpSpec(topology=name, load=0.25, duration_us=60_000, seed=3,
+                   cap_scale=0.0625)
+    scen, table = build_world(name)
+    for bg in (0.0, 0.1):
+        legacy = dataclasses.replace(base, bg_load=bg)
+        scheduled = dataclasses.replace(base, bg_load=bg,
+                                        load_sched="const:segs=5")
+        _flowsets_equal(make_flows(legacy, scen, table),
+                        make_flows(scheduled, scen, table))
+
+
+@pytest.mark.parametrize("engine", ["fluid", "packet"])
+def test_const_schedule_engine_run_bit_identical(engine):
+    """Full-run equality per engine: the schedule axis must not perturb
+    a single simulated byte when the schedule is flat."""
+    specs = [ExpSpec(topology="testbed8", load=0.3, duration_us=50_000,
+                     seed=1, engine=engine, bg_load=0.05,
+                     load_sched=ls)
+             for ls in ("", "const:segs=4")]
+    rep = sweep.run_sweep(specs, sequential=True)
+    a, b = rep.results
+    assert np.array_equal(np.asarray(a.final.fct_us),
+                          np.asarray(b.final.fct_us))
+    assert np.array_equal(np.asarray(a.final.done),
+                          np.asarray(b.final.done))
+
+
+def test_sweep_load_sched_axis_bit_for_bit():
+    """load_sched is a dynamic axis: a grid mixing schedules (and none)
+    shares one compiled trace per scenario and reproduces the
+    sequential loop exactly."""
+    mk = lambda ls, pol: ExpSpec(topology="testbed8", load=0.3,
+                                 duration_us=60_000, seed=2, policy=pol,
+                                 bg_load=0.08, load_sched=ls)
+    specs = [mk(ls, pol)
+             for ls in ("", "const:segs=4", "diurnal:amp=0.6,segs=8",
+                        "flash:at_ms=10,dur_ms=15,mult=3")
+             for pol in ("lcmp", "ecmp")]
+    seq = sweep.run_sweep(specs, sequential=True)
+    bat = sweep.run_sweep(specs)
+    assert bat.num_cells == len(specs)
+    assert bat.num_groups == 1          # one trace for the whole grid
+    for a, b in zip(seq.results, bat.results):
+        assert np.array_equal(a.final.fct_us, b.final.fct_us), b.spec
+        assert np.array_equal(a.final.done, b.final.done), b.spec
+        assert np.array_equal(a.stats.slowdown, b.stats.slowdown), b.spec
+
+
+# --------------------------------------------------- shape semantics (geo)
+GEO8 = "geo:dcs=8,chords=4"
+
+
+def _geo_rows(spec_str, **kw):
+    scen, table = build_world(GEO8)
+    spec = ExpSpec(topology=GEO8, **kw)
+    fg = traffic_pair_ids(spec, scen, table)
+    bg = background_pair_ids(table, fg)
+    t, fg_rows, bg_rows = sched.build(spec_str, 240_000, table, scen,
+                                      fg, bg)
+    return scen, table, fg, bg, t, fg_rows, bg_rows
+
+
+def test_diurnal_phase_shifts_with_source_longitude():
+    """Each pair's diurnal peak lands at its source DC's local peak
+    hour: pairs sourced at different longitudes peak in different
+    segments, offset by lon/360 of the day."""
+    scen, table, fg, bg, t, fg_rows, bg_rows = _geo_rows(
+        "diurnal:amp=0.8,segs=24,weighted=0", pairs="all")
+    dur = 240_000
+    mids = (t + np.append(t[1:], dur)) / 2.0
+    src = np.asarray(table.pair_src)[np.asarray(fg)]
+    lon = np.asarray(scen.dc_lon, np.float64)
+    expect = 1.0 + 0.8 * np.cos(2.0 * np.pi * (
+        mids[None, :] / dur + lon[src, None] / 360.0 - 20.0 / 24.0))
+    assert np.allclose(fg_rows, expect)
+    # two sources ~opposite longitudes peak in anti-phase
+    i = int(np.argmin(lon[src]))
+    j = int(np.argmax(lon[src]))
+    dlon = (lon[src[j]] - lon[src[i]]) / 360.0
+    shift = (np.argmax(fg_rows[j]) - np.argmax(fg_rows[i])) % 24
+    assert abs(shift - (-dlon * 24) % 24) <= 1.0
+    # time-average stays ~1 (load keeps its meaning under the cycle)
+    assert np.allclose(fg_rows.mean(axis=1), 1.0, atol=0.01)
+
+
+def test_diurnal_population_weights_and_shift():
+    """Weighted rows scale by mean-1-normalized pop_src*pop_dst; a
+    traffic-matrix shift reverses the weight assignment mid-run."""
+    scen, table, fg, bg, t, fg_rows, _ = _geo_rows(
+        "diurnal:amp=0.5,segs=12,weighted=1", pairs="all")
+    pop = np.asarray(scen.dc_pop, np.float64)
+    src = np.asarray(table.pair_src)[np.asarray(fg)]
+    dst = np.asarray(table.pair_dst)[np.asarray(fg)]
+    w = pop[src] * pop[dst]
+    w = w / w.mean()
+    _, _, _, _, t0, flat, _ = _geo_rows(
+        "diurnal:amp=0.5,segs=12,weighted=0", pairs="all")
+    assert np.allclose(fg_rows, w[:, None] * flat)
+    # shift_ms: first half keeps w, second half uses reversed w
+    _, _, _, _, _, sh, _ = _geo_rows(
+        "diurnal:amp=0.5,segs=12,weighted=1,shift_ms=120", pairs="all")
+    mids = (t + np.append(t[1:], 240_000)) / 2.0
+    pre, post = mids < 120_000, mids >= 120_000
+    assert np.allclose(sh[:, pre], fg_rows[:, pre])
+    assert np.allclose(sh[:, post], (w[::-1, None] * flat)[:, post])
+
+
+def test_flash_window_and_src_filter():
+    """flash multiplies only the segments whose midpoints fall in the
+    window, and only pairs sourced at `src` when given."""
+    scen, table, fg, bg, t, rows, bg_rows = _geo_rows(
+        "flash:at_ms=60,dur_ms=60,mult=4", pairs="all")
+    mids = (t + np.append(t[1:], 240_000)) / 2.0
+    inwin = (mids >= 60_000) & (mids < 120_000)
+    assert inwin.any() and (~inwin).any()
+    assert np.allclose(rows[:, inwin], 4.0)
+    assert np.allclose(rows[:, ~inwin], 1.0)
+    assert np.allclose(bg_rows[:, inwin], 4.0)      # bg flashes too
+    src_dc = int(np.asarray(table.pair_src)[fg[0]])
+    _, _, _, _, _, rows_src, _ = _geo_rows(
+        f"flash:at_ms=60,dur_ms=60,mult=4,src={src_dc}", pairs="all")
+    hit = np.asarray(table.pair_src)[np.asarray(fg)] == src_dc
+    assert hit.any() and (~hit).any()
+    assert np.allclose(rows_src[hit][:, inwin], 4.0)
+    assert np.allclose(rows_src[~hit], 1.0)
+
+
+# ------------------------------------------------------------- validation
+def test_schedule_string_errors():
+    scen, table = build_world("testbed8")
+    with pytest.raises(ValueError, match="unknown load schedule"):
+        sched.build("sawtooth:amp=1", 1000, table, scen, [0], [])
+    with pytest.raises(ValueError, match="bad parameters"):
+        sched.build("diurnal:bogus=3", 1000, table, scen, [0], [])
+    with pytest.raises(ValueError, match="amp"):
+        sched.build("diurnal:amp=1.5", 1000, table, scen, [0], [])
+    with pytest.raises(ValueError, match="dur_ms"):
+        sched.build("flash:at_ms=10", 1000, table, scen, [0], [])
+
+
+def test_generate_validates_schedule_arrays():
+    scen, table, main = _main_pid("testbed8")
+    with pytest.raises(ValueError, match="ascending"):
+        generate(table, WS, 0.3, 10_000, pair_ids=[main],
+                 sched_t=np.array([5, 10]), load_rows=np.ones((1, 2)))
+    with pytest.raises(ValueError, match="rows must be"):
+        generate(table, WS, 0.3, 10_000, pair_ids=[main],
+                 sched_t=np.array([0, 5000]), load_rows=np.ones((2, 2)))
+    with pytest.raises(ValueError, match="non-negative"):
+        generate(table, WS, 0.3, 10_000, pair_ids=[main],
+                 sched_t=np.array([0, 5000]),
+                 load_rows=np.array([[1.0, -0.5]]))
