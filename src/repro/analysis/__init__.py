@@ -1,0 +1,39 @@
+"""``reprolint`` — repo-specific static analysis for the LCMP reproduction.
+
+Every invariant this package checks was, at some point, enforced by hand
+and broken anyway (see CHANGES.md): the ``_route_arrivals`` flow-0
+scatter clobber was a missing ``mode="drop"``; a new ``ExpSpec`` axis
+can silently become a per-cell recompile; ``POLICY_CODES`` and the
+benchmark CSV schemas are wire formats that keep figure CSVs comparable
+across PRs; and a history-ring read without a ``% HIST`` wrap aliases
+silently once an offset outgrows the ring. ``reprolint`` machine-checks
+them on every commit:
+
+- ``tracing``  (TRC001-TRC004): tracer casts, Python control flow on
+  traced values, ``.at[...]`` scatters without an explicit ``mode=``,
+  and dtype-less ``np.*`` constructors — inside *jit-reachable* code,
+  with reachability seeded from the engine step functions and any
+  function syntactically handed to ``jax.jit``/``lax.scan``/``vmap``.
+- ``axes``     (AXS001-AXS003): every ``ExpSpec`` field must be declared
+  static (trace-key member) or dynamic (per-cell array contents) in the
+  ``AXES_*`` tables next to the dataclass, and the declaration must
+  match how ``spec_to_cfg`` actually consumes the field.
+- ``wire``     (WIR001-WIR002): a generated ``manifest.json`` freezes
+  ``POLICY_CODES``, ``scenarios.names()``, ``sched.FAMILIES``, the
+  benchmark CSV column schemas and the ``BENCH_netsim.json`` key set;
+  any drift fails until the manifest is regenerated in the same diff.
+- ``rings``    (RNG001-RNG002): every subscript into the
+  ``hist_c``/``hist_q``/``hist_u``/``hist_pause`` rings must wrap with
+  ``% HIST``, and the build-time ring-capacity guard must stay present.
+
+Run ``python -m repro.analysis`` (``--format=text|json|github``); see
+``docs/static_analysis.md`` for the checker catalog, the
+``# reprolint: ignore[CODE]`` exemption syntax, and how to regenerate
+the manifest (``python -m repro.analysis --write-manifest``).
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import CODES, Finding
+from repro.analysis.runner import CHECKS, run_checks
+
+__all__ = ["CODES", "CHECKS", "Finding", "run_checks"]

@@ -1,0 +1,60 @@
+"""CLI: ``python -m repro.analysis [--format=text|json|github] ...``.
+
+Exit status is 0 when clean, 1 when any finding survives exemptions —
+suitable for CI gating. ``--write-manifest`` regenerates the
+wire-format freeze and exits 0.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.findings import render
+from repro.analysis.runner import CHECKS, run_checks
+from repro.analysis.wire import write_manifest
+
+
+def _default_root() -> str:
+    # .../<root>/src/repro/analysis/__main__.py -> <root>
+    here = os.path.abspath(os.path.dirname(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: repo-specific JAX tracing-hazard and "
+                    "wire-format contract checks")
+    ap.add_argument("--root", default=_default_root(),
+                    help="repo root to analyze (default: this checkout)")
+    ap.add_argument("--format", dest="fmt", default="text",
+                    choices=("text", "json", "github"),
+                    help="report format (github emits workflow-command "
+                         "annotations)")
+    ap.add_argument("--checks", default=None,
+                    help=f"comma-separated subset of "
+                         f"{','.join(sorted(CHECKS))}")
+    ap.add_argument("--manifest", default=None,
+                    help="override the wire-format manifest path")
+    ap.add_argument("--write-manifest", action="store_true",
+                    help="regenerate the wire-format manifest and exit")
+    args = ap.parse_args(argv)
+
+    if args.write_manifest:
+        path = write_manifest(args.root, args.manifest)
+        print(f"reprolint: wrote {path}")
+        return 0
+
+    checks = args.checks.split(",") if args.checks else None
+    report = run_checks(args.root, checks=checks, manifest=args.manifest)
+    out = render(report.findings, report.suppressed, report.num_files,
+                 style=args.fmt)
+    if out:
+        print(out)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,589 @@
+"""AST plumbing shared by the checkers: the file index, import-aware
+call-graph, jit-reachability, and a small static-vs-traced dataflow.
+
+Everything here is *heuristic but conservative in the flagging
+direction*: the tracing checkers only fire on values the dataflow can
+prove TRACED, so an unresolved helper call (UNKNOWN) never produces a
+finding. Reachability over-approximates (defining a nested function
+counts as calling it; bare-name calls resolve through explicit imports
+only), which is the right bias for hazard checks — an unreachable
+function is simply never inspected.
+
+Value lattice: ``STATIC < UNKNOWN < TRACED``.
+
+- STATIC: trace-time Python values — config dataclasses (``SimConfig``,
+  the ``*Params`` families), literals, shapes (``x.shape``/``len(x)``),
+  and anything derived from only those. Casting or branching on these
+  inside jitted code is fine (it is how static knobs work).
+- TRACED: function parameters that are (or default to) device arrays —
+  the scan carry, ``SimArrays``, the step counter — and anything an
+  expression derives from them.
+- UNKNOWN: everything the two rules above cannot decide.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import (
+    Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple,
+)
+
+STATIC, UNKNOWN, TRACED = 0, 1, 2
+
+# parameter annotations that mean "trace-time Python value"
+STATIC_PARAM_TYPES = {
+    "SimConfig", "SelectParams", "PathQParams", "CongParams", "SwitchTables",
+    "ExpSpec", "int", "float", "bool", "str", "bytes", "tuple", "dict",
+    "np.ndarray",
+}
+# parameter names conventionally bound to static config in this repo
+STATIC_PARAM_NAMES = {"cfg", "params", "config", "tables", "mode", "scale",
+                      "policy", "name", "axis", "seed"}
+
+# callables whose mere syntactic use marks the referenced function as
+# entering a traced context (seed) — matched on the dotted suffix
+_JIT_WRAPPERS = ("jit", "vmap", "pmap", "grad", "value_and_grad",
+                 "shard_map", "pallas_call", "checkpoint", "remat")
+_SCAN_WRAPPERS = ("scan",)
+_CTRL_WRAPPERS = ("cond", "switch", "while_loop", "fori_loop", "map",
+                  "associative_scan")
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.lax.scan`` -> "jax.lax.scan"; None for non-name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    qual: str                       # "outer.inner" within the module
+    path: str                       # repo-relative module path
+    node: ast.AST                   # FunctionDef / AsyncFunctionDef
+    parent: Optional[str] = None    # enclosing function qual, if nested
+    nested: List[str] = dataclasses.field(default_factory=list)
+    returns_nested: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}::{self.qual}"
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: str                       # repo-relative, forward slashes
+    dotted: str                     # importable dotted name under the root
+    tree: ast.Module
+    lines: List[str]
+    funcs: Dict[str, FuncInfo] = dataclasses.field(default_factory=dict)
+    # local name -> ("module", dotted) | ("attr", dotted_module, attr)
+    imports: Dict[str, Tuple] = dataclasses.field(default_factory=dict)
+
+
+class RepoIndex:
+    """Parsed view of every analyzed file plus name-resolution maps."""
+
+    def __init__(self, root: str, files: Sequence[str]) -> None:
+        self.root = root
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.by_dotted: Dict[str, ModuleInfo] = {}
+        self.funcs: Dict[str, FuncInfo] = {}
+        for path in files:
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            try:
+                with open(path, encoding="utf-8") as f:
+                    src = f.read()
+                tree = ast.parse(src, filename=rel)
+            except (SyntaxError, UnicodeDecodeError, OSError):
+                continue
+            mod = ModuleInfo(path=rel, dotted=_dotted_of(rel), tree=tree,
+                             lines=src.splitlines())
+            _index_module(mod)
+            self.modules[rel] = mod
+            self.by_dotted[mod.dotted] = mod
+            for fi in mod.funcs.values():
+                self.funcs[fi.key] = fi
+
+    # -------------------------------------------------- name resolution
+    def resolve_call(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                     node: ast.AST) -> Optional[FuncInfo]:
+        """Resolve a callee expression to a FuncInfo, or None."""
+        if isinstance(node, ast.Name):
+            fi = self._resolve_name(mod, scope, node.id)
+            if fi is not None:
+                return fi
+            imp = mod.imports.get(node.id)
+            if imp and imp[0] == "attr":
+                return self._module_func(imp[1], imp[2])
+            return None
+        if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+            imp = mod.imports.get(node.value.id)
+            if imp and imp[0] == "module":
+                return self._module_func(imp[1], node.attr)
+            if imp and imp[0] == "attr":
+                # `from repro.netsim import engine; engine.decide(...)`
+                return self._module_func(f"{imp[1]}.{imp[2]}", node.attr)
+        return None
+
+    def _resolve_name(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                      name: str) -> Optional[FuncInfo]:
+        """Nested defs of the scope chain first, then module level."""
+        s = scope
+        while s is not None:
+            cand = f"{s.qual}.{name}"
+            if cand in mod.funcs:
+                return mod.funcs[cand]
+            s = mod.funcs.get(s.parent) if s.parent else None
+        return mod.funcs.get(name)
+
+    def _module_func(self, dotted: str, attr: str) -> Optional[FuncInfo]:
+        target = self.by_dotted.get(dotted)
+        if target is None:
+            # `from repro.netsim import engine` resolves the submodule
+            target = self.by_dotted.get(f"{dotted}.{attr}")
+            if target is not None:
+                return None      # bare module reference, not a function
+            return None
+        return target.funcs.get(attr)
+
+    # -------------------------------------------------- reachability
+    def seeds_and_scan_roots(self, named_seeds: Iterable[Tuple[str, str]] = ()
+                             ) -> Tuple[Set[str], Set[str]]:
+        """(jit seeds, scan-body roots), as FuncInfo keys.
+
+        A function is a seed when a reference to it appears inside a call
+        to a jit-like wrapper (``jax.jit(f)``, ``jax.vmap(f)``,
+        ``lax.cond(p, f, g, x)``...), or when (module-suffix, name) is in
+        ``named_seeds``. Scan roots are functions passed to ``lax.scan``;
+        a local ``step = make_step(...)`` indirection resolves through
+        ``make_step``'s returned nested def.
+        """
+        seeds: Set[str] = set()
+        scan_roots: Set[str] = set()
+        for mod in self.modules.values():
+            for scope_qual, call in _iter_calls(mod):
+                cal = dotted_name(call.func)
+                if cal is None:
+                    continue
+                last = cal.rsplit(".", 1)[-1]
+                is_scan = last in _SCAN_WRAPPERS
+                if not (is_scan or last in _JIT_WRAPPERS
+                        or last in _CTRL_WRAPPERS):
+                    continue
+                scope = mod.funcs.get(scope_qual) if scope_qual else None
+                for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                    for fi in self._func_refs(mod, scope, arg):
+                        seeds.add(fi.key)
+                        if is_scan:
+                            scan_roots.add(fi.key)
+        for suffix, name in named_seeds:
+            for fi in self.funcs.values():
+                if fi.path.endswith(suffix) and fi.qual == name:
+                    seeds.add(fi.key)
+        return seeds, scan_roots
+
+    def _func_refs(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                   node: ast.AST) -> List[FuncInfo]:
+        """Function objects an argument expression may denote."""
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            fi = self.resolve_call(mod, scope, node)
+            if fi is not None:
+                return [fi]
+            # local alias:  step = make_step(...)  ->  returned nested def
+            if isinstance(node, ast.Name) and scope is not None:
+                out = []
+                for asg in ast.walk(scope.node):
+                    if (isinstance(asg, ast.Assign)
+                            and len(asg.targets) == 1
+                            and isinstance(asg.targets[0], ast.Name)
+                            and asg.targets[0].id == node.id
+                            and isinstance(asg.value, ast.Call)):
+                        maker = self.resolve_call(mod, scope, asg.value.func)
+                        if maker is not None:
+                            mmod = self.modules[maker.path]
+                            for rn in maker.returns_nested:
+                                nf = mmod.funcs.get(f"{maker.qual}.{rn}")
+                                if nf is not None:
+                                    out.append(nf)
+                return out
+        return []
+
+    def reachable(self, seeds: Set[str]) -> Set[str]:
+        """Transitive closure over call edges + nested-def containment."""
+        out: Set[str] = set()
+        work = [k for k in seeds if k in self.funcs]
+        while work:
+            key = work.pop()
+            if key in out:
+                continue
+            out.add(key)
+            fi = self.funcs[key]
+            mod = self.modules[fi.path]
+            for n in fi.nested:
+                nk = f"{fi.path}::{fi.qual}.{n}"
+                if nk in self.funcs and nk not in out:
+                    work.append(nk)
+            for _, call in _iter_calls_in(fi, mod):
+                callee = self.resolve_call(mod, fi, call.func)
+                if callee is not None and callee.key not in out:
+                    work.append(callee.key)
+        return out
+
+
+@dataclasses.dataclass
+class CheckContext:
+    """Everything a checker gets: the repo root, the parsed index, and
+    an optional wire-manifest path override."""
+    root: str
+    index: RepoIndex
+    manifest_path: Optional[str] = None
+
+
+def _dotted_of(rel: str) -> str:
+    p = rel[:-3] if rel.endswith(".py") else rel
+    if p.endswith("/__init__"):
+        p = p[: -len("/__init__")]
+    if p.startswith("src/"):
+        p = p[4:]
+    return p.replace("/", ".")
+
+
+def _index_module(mod: ModuleInfo) -> None:
+    """Collect function defs (with nesting), returns-nested, imports."""
+
+    def walk(node: ast.AST, parent: Optional[FuncInfo]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = (f"{parent.qual}.{child.name}" if parent
+                        else child.name)
+                fi = FuncInfo(qual=qual, path=mod.path, node=child,
+                              parent=parent.qual if parent else None)
+                mod.funcs[qual] = fi
+                if parent is not None:
+                    parent.nested.append(child.name)
+                walk(child, fi)
+            elif isinstance(child, ast.ClassDef):
+                # methods index under "Class.method"; nesting inside
+                # functions keeps the enclosing qual prefix
+                fake = FuncInfo(qual=(f"{parent.qual}.{child.name}" if parent
+                                      else child.name),
+                                path=mod.path, node=child,
+                                parent=parent.qual if parent else None)
+                walk(child, fake)
+            else:
+                walk(child, parent)
+
+    walk(mod.tree, None)
+
+    for fi in mod.funcs.values():
+        if not isinstance(fi.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for stmt in ast.walk(fi.node):
+            if (isinstance(stmt, ast.Return)
+                    and isinstance(stmt.value, ast.Name)
+                    and stmt.value.id in fi.nested):
+                fi.returns_nested.add(stmt.value.id)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                mod.imports[a.asname or a.name.split(".")[0]] = (
+                    "module", a.name)
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                # may denote a function (`from engine import decide`) or
+                # a submodule (`from repro.netsim import engine`) — the
+                # RepoIndex lookup tries both interpretations
+                mod.imports[a.asname or a.name] = (
+                    "attr", node.module, a.name)
+
+
+def _iter_calls(mod: ModuleInfo) -> Iterator[Tuple[Optional[str], ast.Call]]:
+    """(enclosing function qual | None, Call node) for a whole module."""
+    owner: Dict[int, Optional[str]] = {}
+
+    def tag(node: ast.AST, qual: Optional[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            q = qual
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{qual}.{child.name}" if qual else child.name
+            elif isinstance(child, ast.ClassDef):
+                q = f"{qual}.{child.name}" if qual else child.name
+            owner[id(child)] = q if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef)) else qual
+            tag(child, q)
+
+    tag(mod.tree, None)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            yield _owner_of(mod, node), node
+
+
+def _owner_of(mod: ModuleInfo, node: ast.Call) -> Optional[str]:
+    """Innermost function qual whose span contains the call (linenos)."""
+    best: Optional[str] = None
+    best_span = None
+    for fi in mod.funcs.values():
+        n = fi.node
+        end = getattr(n, "end_lineno", n.lineno)
+        if n.lineno <= node.lineno <= end:
+            span = end - n.lineno
+            if best_span is None or span < best_span:
+                best, best_span = fi.qual, span
+    return best
+
+
+def _iter_calls_in(fi: FuncInfo, mod: ModuleInfo) -> Iterator[ast.Call]:
+    """Call nodes belonging to ``fi``'s own body (nested defs excluded —
+    they are separate FuncInfos with their own edges)."""
+    nested_spans = []
+    for n in fi.nested:
+        nf = mod.funcs.get(f"{fi.qual}.{n}")
+        if nf is not None:
+            nested_spans.append((nf.node.lineno,
+                                 getattr(nf.node, "end_lineno",
+                                         nf.node.lineno)))
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Call):
+            if any(a <= node.lineno <= b for a, b in nested_spans):
+                continue
+            yield fi.qual, node
+
+
+# ------------------------------------------------------------- dataflow
+def join(*vals: int) -> int:
+    return max(vals) if vals else STATIC
+
+
+class ValueFlow:
+    """One-function forward dataflow over the STATIC/UNKNOWN/TRACED
+    lattice. Checkers subclass and override the ``on_*`` hooks, which
+    fire during the statement walk with the environment live."""
+
+    #: Attribute names whose value is static regardless of the base
+    SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+    def __init__(self, mod: ModuleInfo, fi: FuncInfo,
+                 init_env: Optional[Dict[str, int]] = None) -> None:
+        self.mod = mod
+        self.fi = fi
+        self.env: Dict[str, int] = dict(init_env or {})
+        self._classify_params()
+
+    # ------------------------------------------------------------ hooks
+    def on_call(self, node: ast.Call, arg_classes: List[int]) -> None:
+        pass
+
+    def on_branch(self, node: ast.AST, test_class: int) -> None:
+        pass
+
+    def on_subscript(self, node: ast.Subscript, value_class: int,
+                     index_class: int) -> None:
+        pass
+
+    # ------------------------------------------------------- main entry
+    def run(self) -> Dict[str, int]:
+        body = getattr(self.fi.node, "body", [])
+        # two passes: loop-carried names settle on the second
+        for _ in range(2):
+            for stmt in body:
+                self._stmt(stmt)
+        return self.env
+
+    # ---------------------------------------------------------- helpers
+    def _classify_params(self) -> None:
+        node = self.fi.node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        args = node.args
+        # params with a literal default (None/True/False/0/"s") are
+        # static flags in this codebase, not traced arrays
+        has_const_default: Dict[str, bool] = {}
+        pos = list(args.posonlyargs) + list(args.args)
+        for a, d in zip(reversed(pos), reversed(args.defaults)):
+            has_const_default[a.arg] = isinstance(d, ast.Constant)
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if d is not None:
+                has_const_default[a.arg] = isinstance(d, ast.Constant)
+        for a in (pos + list(args.kwonlyargs)
+                  + ([args.vararg] if args.vararg else [])
+                  + ([args.kwarg] if args.kwarg else [])):
+            cls = TRACED
+            ann_names = set()
+            if a.annotation is not None:
+                for n in ast.walk(a.annotation):
+                    if isinstance(n, ast.Name):
+                        ann_names.add(n.id)
+                    elif isinstance(n, ast.Attribute):
+                        ann_names.add(n.attr)
+                        # np.ndarray is host data even under jit
+                        if isinstance(n.value, ast.Name) and \
+                                n.value.id in ("np", "numpy"):
+                            ann_names.add("np.ndarray")
+                    elif isinstance(n, ast.Constant) and \
+                            isinstance(n.value, str):
+                        ann_names.add(n.value)
+            if ann_names & STATIC_PARAM_TYPES:
+                cls = STATIC          # incl. Optional[int] etc.
+            elif a.arg in STATIC_PARAM_NAMES:
+                cls = STATIC
+            elif has_const_default.get(a.arg):
+                cls = STATIC
+            self.env[a.arg] = cls
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            self.env[stmt.name] = STATIC     # the function object itself
+            return                           # body analyzed separately
+        if isinstance(stmt, ast.Assign):
+            cls = self.expr(stmt.value)
+            for tgt in stmt.targets:
+                self._bind(tgt, cls)
+        elif isinstance(stmt, ast.AugAssign):
+            cls = self.expr(stmt.value)
+            if isinstance(stmt.target, ast.Name):
+                self.env[stmt.target.id] = join(
+                    self.env.get(stmt.target.id, STATIC), cls)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._bind(stmt.target, self.expr(stmt.value))
+        elif isinstance(stmt, (ast.If, ast.While)):
+            tc = self.expr(stmt.test)
+            self.on_branch(stmt, tc)
+            for s in stmt.body + stmt.orelse:
+                self._stmt(s)
+        elif isinstance(stmt, ast.For):
+            it = self.expr(stmt.iter)
+            self._bind(stmt.target, self._iter_elem_class(stmt.iter, it))
+            for s in stmt.body + stmt.orelse:
+                self._stmt(s)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.expr(item.context_expr)
+            for s in stmt.body:
+                self._stmt(s)
+        elif isinstance(stmt, ast.Try):
+            for s in (stmt.body + stmt.orelse + stmt.finalbody
+                      + [h for hh in stmt.handlers for h in hh.body]):
+                self._stmt(s)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self.expr(stmt.value)
+        elif isinstance(stmt, ast.Expr):
+            self.expr(stmt.value)
+        elif isinstance(stmt, (ast.Raise, ast.Assert)):
+            for v in ast.iter_child_nodes(stmt):
+                if isinstance(v, ast.expr):
+                    self.expr(v)
+
+    def _bind(self, target: ast.expr, cls: int) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = cls
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, cls)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, cls)
+        # attribute/subscript targets: no env effect
+
+    def _iter_elem_class(self, iter_node: ast.expr, iter_cls: int) -> int:
+        d = dotted_name(iter_node.func) if isinstance(iter_node, ast.Call) \
+            else None
+        if d in ("range", "enumerate", "zip"):
+            if isinstance(iter_node, ast.Call):
+                return join(*[self.expr(a) for a in iter_node.args]) \
+                    if iter_node.args else STATIC
+        return iter_cls
+
+    # ------------------------------------------------- expression rules
+    def expr(self, node: ast.expr) -> int:
+        if isinstance(node, ast.Constant):
+            return STATIC
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, STATIC)   # globals/consts: static
+        if isinstance(node, ast.Attribute):
+            if node.attr in self.SHAPE_ATTRS:
+                self.expr(node.value)
+                return STATIC
+            return self.expr(node.value)
+        if isinstance(node, ast.Subscript):
+            vc = self.expr(node.value)
+            ic = self.expr(node.slice)
+            self.on_subscript(node, vc, ic)
+            return join(vc, ic)
+        if isinstance(node, ast.Call):
+            return self._call(node)
+        if isinstance(node, ast.BinOp):
+            return join(self.expr(node.left), self.expr(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.expr(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return join(*[self.expr(v) for v in node.values])
+        if isinstance(node, ast.Compare):
+            return join(self.expr(node.left),
+                        *[self.expr(c) for c in node.comparators])
+        if isinstance(node, ast.IfExp):
+            return join(self.expr(node.test), self.expr(node.body),
+                        self.expr(node.orelse))
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return join(*[self.expr(e) for e in node.elts]) \
+                if node.elts else STATIC
+        if isinstance(node, ast.Dict):
+            vals = [v for v in list(node.keys) + list(node.values)
+                    if v is not None]
+            return join(*[self.expr(v) for v in vals]) if vals else STATIC
+        if isinstance(node, ast.Slice):
+            parts = [p for p in (node.lower, node.upper, node.step)
+                     if p is not None]
+            return join(*[self.expr(p) for p in parts]) if parts else STATIC
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            for gen in node.generators:
+                self.expr(gen.iter)
+            return UNKNOWN
+        if isinstance(node, ast.DictComp):
+            for gen in node.generators:
+                self.expr(gen.iter)
+            return UNKNOWN
+        if isinstance(node, ast.Lambda):
+            return STATIC
+        if isinstance(node, ast.Starred):
+            return self.expr(node.value)
+        if isinstance(node, ast.JoinedStr):
+            return STATIC
+        if isinstance(node, ast.FormattedValue):
+            self.expr(node.value)
+            return STATIC
+        if isinstance(node, ast.NamedExpr):
+            cls = self.expr(node.value)
+            self._bind(node.target, cls)
+            return cls
+        return UNKNOWN
+
+    def _call(self, node: ast.Call) -> int:
+        arg_classes = [self.expr(a) for a in node.args]
+        kw_classes = [self.expr(kw.value) for kw in node.keywords]
+        self.on_call(node, arg_classes)
+        d = dotted_name(node.func)
+        allc = arg_classes + kw_classes
+        if d is not None:
+            root = d.split(".", 1)[0]
+            if d == "len" or d.endswith(".len"):
+                return STATIC
+            if root in ("jnp", "jax", "lax", "np", "numpy") or d in (
+                    "float", "int", "bool", "str", "abs", "max", "min",
+                    "round", "sum", "range", "tuple", "list", "dict",
+                    "sorted", "enumerate", "zip", "divmod", "pow"):
+                return join(*allc) if allc else STATIC
+        if isinstance(node.func, ast.Attribute):
+            # method call: classification follows the receiver + args
+            return join(self.expr(node.func.value), *allc) \
+                if allc else self.expr(node.func.value)
+        return UNKNOWN

@@ -1,0 +1,113 @@
+"""Finding model, the frozen code catalog, exemptions, and output formats.
+
+A finding is ``(code, path, line, message)``. Codes are wire format for
+CI annotations and the fixture corpus — new checks append fresh codes,
+existing codes never change meaning.
+
+Exemptions are per-line source comments::
+
+    x = float(t0)  # reprolint: ignore[TRC001] t0 is a build-time scalar
+
+The comment may sit on the flagged line or the line directly above it
+(for flagged expressions that span multiple lines, anchor the comment on
+the reported line). Several codes may share one comment:
+``ignore[TRC001,TRC004]``. A justification after the bracket is
+encouraged and ignored by the parser.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, FrozenSet, Iterable, List, Sequence, Set, Tuple
+
+# code -> one-line description (frozen; append-only)
+CODES: Dict[str, str] = {
+    "TRC001": "tracer cast: float()/int()/bool()/np.asarray() on a traced "
+              "value inside jit-reachable code",
+    "TRC002": "Python `if`/`while` on a traced value inside jit-reachable "
+              "code (use jnp.where / lax.cond)",
+    "TRC003": ".at[...] scatter with a traced index but no explicit mode= "
+              "inside a scan body",
+    "TRC004": "dtype-less np.* array constructor (float64 default) inside "
+              "jit-reachable code",
+    "AXS001": "ExpSpec sweep-axis classification missing or inconsistent "
+              "(AXES_STATIC / AXES_DYNAMIC / AXES_EXEMPT)",
+    "AXS002": "axis declared dynamic but read by spec_to_cfg — it would "
+              "recompile every sweep cell",
+    "AXS003": "axis declared static but never reaches the trace key via "
+              "spec_to_cfg",
+    "WIR001": "wire-format drift vs manifest.json — regenerate with "
+              "`python -m repro.analysis --write-manifest` in this diff",
+    "WIR002": "wire-format manifest missing — generate it with "
+              "`python -m repro.analysis --write-manifest`",
+    "RNG001": "history-ring subscript without a `% HIST` wrap (ring reads "
+              "alias silently once an offset outgrows the ring)",
+    "RNG002": "HIST build-time capacity guard not found (build() must "
+              "validate max RTT / signal-delay offsets against HIST)",
+}
+
+_IGNORE_RE = re.compile(r"#\s*reprolint:\s*ignore\[([A-Z0-9,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str
+    path: str          # repo-relative, forward slashes
+    line: int          # 1-indexed; 0 = whole-file / repo-level finding
+    message: str
+
+    def format(self, style: str = "text") -> str:
+        if style == "github":
+            # GitHub Actions workflow-command annotation
+            return (f"::error file={self.path},line={max(self.line, 1)},"
+                    f"title=reprolint {self.code}::{self.message}")
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def ignored_codes(source_lines: Sequence[str], line: int) -> FrozenSet[str]:
+    """Codes exempted at ``line`` (1-indexed): an ``ignore[...]`` comment
+    on the line itself or on the line directly above."""
+    out: Set[str] = set()
+    for ln in (line, line - 1):
+        if 1 <= ln <= len(source_lines):
+            m = _IGNORE_RE.search(source_lines[ln - 1])
+            if m:
+                out.update(c.strip() for c in m.group(1).split(","))
+    return frozenset(out)
+
+
+def apply_exemptions(
+        findings: Iterable[Finding], sources: Dict[str, List[str]],
+) -> Tuple[List[Finding], List[Finding]]:
+    """Split findings into (kept, suppressed) using per-line comments.
+    ``sources`` maps repo-relative path -> source lines."""
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in findings:
+        lines = sources.get(f.path, [])
+        if f.line > 0 and f.code in ignored_codes(lines, f.line):
+            suppressed.append(f)
+        else:
+            kept.append(f)
+    return kept, suppressed
+
+
+def render(findings: Sequence[Finding], suppressed: Sequence[Finding],
+           num_files: int, style: str = "text") -> str:
+    """Render a report in one of the three output formats."""
+    if style == "json":
+        return json.dumps({
+            "findings": [dataclasses.asdict(f) for f in findings],
+            "suppressed": len(suppressed),
+            "files": num_files,
+            "ok": not findings,
+        }, indent=2, sort_keys=True)
+    lines = [f.format(style) for f in findings]
+    if style == "text":
+        verdict = "clean" if not findings else f"{len(findings)} finding(s)"
+        lines.append(f"reprolint: {verdict} over {num_files} file(s)"
+                     f" ({len(suppressed)} suppressed)")
+    elif not findings:
+        lines.append(f"reprolint: clean over {num_files} file(s)")
+    return "\n".join(lines)

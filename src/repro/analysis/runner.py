@@ -1,0 +1,81 @@
+"""Checker registry, file discovery, and the single-shot ``run_checks``.
+
+Default file set: every ``.py`` under ``<root>/src`` and
+``<root>/tests``, excluding anything under a ``fixtures`` directory (the
+known-bad corpus must not dirty the repo run). A root with neither
+directory — a fixture tree — is walked whole instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.analysis.astutil import CheckContext, RepoIndex
+from repro.analysis.axes import check_axes
+from repro.analysis.findings import Finding, apply_exemptions
+from repro.analysis.rings import check_rings
+from repro.analysis.tracing import check_tracing
+from repro.analysis.wire import check_wire
+
+CHECKS: Dict[str, Callable[[CheckContext], List[Finding]]] = {
+    "tracing": check_tracing,
+    "axes": check_axes,
+    "wire": check_wire,
+    "rings": check_rings,
+}
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]
+    suppressed: List[Finding]
+    num_files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def default_files(root: str) -> List[str]:
+    roots = [d for d in (os.path.join(root, "src"),
+                         os.path.join(root, "tests")) if os.path.isdir(d)]
+    if not roots:
+        roots = [root]
+    out: List[str] = []
+    for top in roots:
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("fixtures", "__pycache__",
+                                        ".git", ".ruff_cache",
+                                        ".mypy_cache")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return sorted(out)
+
+
+def run_checks(root: str, checks: Optional[Sequence[str]] = None,
+               files: Optional[Sequence[str]] = None,
+               manifest: Optional[str] = None) -> Report:
+    root = os.path.abspath(root)
+    if files is None:
+        files = default_files(root)
+    index = RepoIndex(root, files)
+    ctx = CheckContext(root=root, index=index, manifest_path=manifest)
+
+    names = list(checks) if checks else list(CHECKS)
+    unknown = [n for n in names if n not in CHECKS]
+    if unknown:
+        raise ValueError(f"unknown check(s): {unknown}; "
+                         f"available: {sorted(CHECKS)}")
+
+    findings: List[Finding] = []
+    for name in names:
+        findings.extend(CHECKS[name](ctx))
+
+    sources = {mod.path: mod.lines for mod in index.modules.values()}
+    kept, suppressed = apply_exemptions(findings, sources)
+    kept.sort(key=lambda f: (f.path, f.line, f.code))
+    return Report(findings=kept, suppressed=suppressed,
+                  num_files=len(index.modules))

@@ -1,0 +1,125 @@
+"""TRC001-TRC004: JAX tracing hazards inside jit-reachable code.
+
+Reachability is seeded from the engine entry points (``run_impl`` in
+``fluid.py``/``packet.py``) plus any function syntactically handed to a
+jit-like wrapper (``jax.jit``/``vmap``/``shard_map``/``lax.cond``/...).
+Scan bodies — functions passed to ``lax.scan``, resolved through the
+``step = make_step(...)`` indirection — additionally activate TRC003.
+
+The dataflow only flags values it can prove TRACED (see astutil), so
+static config reads (``cfg.dt_us``) and unresolved helpers never fire.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.astutil import (
+    TRACED, CheckContext, FuncInfo, ModuleInfo, RepoIndex, ValueFlow,
+    dotted_name,
+)
+from repro.analysis.findings import Finding
+
+# engine entry points that are jitted by callers outside the AST's view
+NAMED_SEEDS: Tuple[Tuple[str, str], ...] = (
+    ("netsim/fluid.py", "run_impl"),
+    ("netsim/packet.py", "run_impl"),
+)
+
+_CAST_FUNCS = {"float", "int", "bool"}
+_NP_CASTS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+_NP_CTORS = {"array", "asarray", "zeros", "ones", "full", "empty",
+             "arange", "linspace", "eye"}
+_SCATTER_METHODS = {"set", "add", "multiply", "mul", "divide", "div",
+                    "power", "min", "max", "apply"}
+
+
+class _TracingFlow(ValueFlow):
+    def __init__(self, mod: ModuleInfo, fi: FuncInfo,
+                 init_env: Optional[Dict[str, int]],
+                 in_scan: bool, findings: List[Finding]) -> None:
+        super().__init__(mod, fi, init_env)
+        self.in_scan = in_scan
+        self.findings = findings
+
+    def _emit(self, code: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            code=code, path=self.mod.path,
+            line=getattr(node, "lineno", 0),
+            message=f"{msg} [in `{self.fi.qual}`]"))
+
+    # ---------------------------------------------------------- hooks
+    def on_call(self, node: ast.Call, arg_classes: List[int]) -> None:
+        d = dotted_name(node.func)
+        if d is not None:
+            if (d in _CAST_FUNCS or d in _NP_CASTS) and \
+                    any(c == TRACED for c in arg_classes):
+                self._emit("TRC001", node,
+                           f"`{d}()` applied to a traced value — this "
+                           f"raises at trace time under jit; use jnp "
+                           f"ops or hoist to build time")
+            root = d.split(".", 1)[0]
+            name = d.rsplit(".", 1)[-1]
+            if root in ("np", "numpy") and name in _NP_CTORS:
+                has_dtype = any(kw.arg == "dtype" for kw in node.keywords)
+                # positional dtype slot: array/asarray/zeros/... take it
+                # second, full takes it third
+                pos_ok = len(node.args) >= (3 if name == "full" else 2) \
+                    and name not in ("arange", "linspace")
+                if not has_dtype and not pos_ok:
+                    self._emit("TRC004", node,
+                               f"`{d}(...)` without dtype= defaults to "
+                               f"float64 and silently upcasts jnp "
+                               f"expressions it leaks into")
+        # .at[idx].set/add(...) without explicit mode=, inside scan bodies
+        f = node.func
+        if (self.in_scan and isinstance(f, ast.Attribute)
+                and f.attr in _SCATTER_METHODS
+                and isinstance(f.value, ast.Subscript)
+                and isinstance(f.value.value, ast.Attribute)
+                and f.value.value.attr == "at"):
+            if not any(kw.arg == "mode" for kw in node.keywords):
+                if self.expr(f.value.slice) == TRACED:
+                    self._emit("TRC003", node,
+                               f"`.at[...].{f.attr}(...)` with a traced "
+                               f"index but no explicit mode= in a scan "
+                               f"body — default FILL_OR_DROP hides OOB "
+                               f"bugs; state intent with mode=")
+
+    def on_branch(self, node: ast.AST, test_class: int) -> None:
+        if test_class == TRACED:
+            kind = "while" if isinstance(node, ast.While) else "if"
+            self._emit("TRC002", node,
+                       f"Python `{kind}` on a traced value fails under "
+                       f"jit — use jnp.where / lax.cond / lax.while_loop")
+
+
+def check_tracing(ctx: CheckContext) -> List[Finding]:
+    index: RepoIndex = ctx.index
+    seeds, scan_roots = index.seeds_and_scan_roots(NAMED_SEEDS)
+    reach = index.reachable(seeds)
+    scan_reach = index.reachable({k for k in scan_roots if k in index.funcs})
+
+    findings: List[Finding] = []
+    envs: Dict[str, Dict[str, int]] = {}
+    # parents before nested so closures inherit the parent environment
+    for key in sorted(reach, key=lambda k: (index.funcs[k].path,
+                                            index.funcs[k].qual.count("."),
+                                            index.funcs[k].qual)):
+        fi = index.funcs[key]
+        mod = index.modules[fi.path]
+        init: Dict[str, int] = {}
+        if fi.parent is not None:
+            init = envs.get(f"{fi.path}::{fi.parent}", {})
+        flow = _TracingFlow(mod, fi, init, in_scan=key in scan_reach,
+                            findings=findings)
+        envs[key] = flow.run()
+
+    seen: Set[Tuple[str, str, int]] = set()
+    out: List[Finding] = []
+    for f in findings:
+        k = (f.code, f.path, f.line)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out

@@ -1,0 +1,154 @@
+"""WIR001/WIR002: wire-format freeze against a generated manifest.
+
+The manifest (``src/repro/analysis/manifest.json``) snapshots every
+cross-PR comparison surface:
+
+- ``policy_codes``  — ``engine.POLICY_CODES`` (figure CSVs and sweep
+  cells encode policies by these integers)
+- ``scenario_names`` — ``scenarios.names()`` registry
+- ``sched_families`` — ``traffic.sched.FAMILIES``
+- ``csv_schemas``   — column header of every ``_csv(...)`` emit site in
+  ``benchmarks/figures.py`` (extracted from the AST, so the freeze
+  tracks the code, not a stale doc)
+- ``bench_keys``    — the ``meta`` / ``rows_us`` key sets of
+  ``BENCH_netsim.json``
+
+Any drift fails CI until the manifest is regenerated **in the same
+diff** (``python -m repro.analysis --write-manifest``), which turns a
+silent wire-format change into an explicit, reviewable file change.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.analysis.astutil import CheckContext
+from repro.analysis.findings import Finding
+
+MANIFEST_REL = "src/repro/analysis/manifest.json"
+REGEN = "python -m repro.analysis --write-manifest"
+
+
+def _import_repro(root: str) -> Tuple[Any, Any, Any]:
+    src = os.path.join(root, "src")
+    if os.path.isdir(src) and src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.netsim import engine, scenarios  # noqa: PLC0415
+    from repro.traffic import sched  # noqa: PLC0415
+    return engine, scenarios, sched
+
+
+def _csv_schemas(figures_path: str) -> Dict[str, List[str]]:
+    """{csv filename: [columns]} from every ``_csv(...)`` call site."""
+    with open(figures_path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=figures_path)
+    out: Dict[str, List[str]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "_csv"
+                and len(node.args) >= 2):
+            continue
+        name_arg, header_arg = node.args[0], node.args[1]
+        name: Optional[str] = None
+        if isinstance(name_arg, ast.Constant) and isinstance(name_arg.value,
+                                                             str):
+            name = name_arg.value
+        elif (isinstance(name_arg, ast.Call) and name_arg.args
+              and isinstance(name_arg.args[0], ast.Constant)
+              and isinstance(name_arg.args[0].value, str)):
+            name = name_arg.args[0].value
+        if name is None:
+            continue
+        if isinstance(header_arg, ast.Constant) and \
+                isinstance(header_arg.value, str):
+            out[name] = header_arg.value.split(",")
+    return out
+
+
+def build_manifest(root: str) -> Dict:
+    engine, scenarios, sched = _import_repro(root)
+    bench_path = os.path.join(root, "BENCH_netsim.json")
+    bench: Dict[str, List[str]] = {}
+    if os.path.exists(bench_path):
+        with open(bench_path, encoding="utf-8") as f:
+            data = json.load(f)
+        bench = {"top": sorted(data),
+                 "meta": sorted(data.get("meta", {})),
+                 "rows_us": sorted(data.get("rows_us", {}))}
+    return {
+        "format": 1,
+        "policy_codes": dict(engine.POLICY_CODES),
+        "redecide_policies": list(engine.REDECIDE_POLICIES),
+        "scenario_names": list(scenarios.names()),
+        "sched_families": list(sched.FAMILIES),
+        "csv_schemas": _csv_schemas(
+            os.path.join(root, "benchmarks", "figures.py")),
+        "bench_keys": bench,
+    }
+
+
+def write_manifest(root: str, path: Optional[str] = None) -> str:
+    path = path or os.path.join(root, MANIFEST_REL)
+    manifest = build_manifest(root)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def _diff_section(name: str, want: Any, got: Any) -> str:
+    if isinstance(want, dict) and isinstance(got, dict):
+        added = sorted(set(got) - set(want))
+        removed = sorted(set(want) - set(got))
+        changed = sorted(k for k in set(want) & set(got)
+                         if want[k] != got[k])
+        bits = []
+        if added:
+            bits.append(f"added {added}")
+        if removed:
+            bits.append(f"removed {removed}")
+        if changed:
+            bits.append(f"changed {changed}")
+        return "; ".join(bits) or "differs"
+    if isinstance(want, list) and isinstance(got, list):
+        added = sorted(set(map(str, got)) - set(map(str, want)))
+        removed = sorted(set(map(str, want)) - set(map(str, got)))
+        bits = []
+        if added:
+            bits.append(f"added {added}")
+        if removed:
+            bits.append(f"removed {removed}")
+        return "; ".join(bits) or "reordered"
+    return f"was {want!r}, now {got!r}"
+
+
+def check_wire(ctx: CheckContext) -> List[Finding]:
+    root = ctx.root
+    # only meaningful on the real repo layout (fixture trees skip)
+    if not os.path.exists(os.path.join(root, "src", "repro", "netsim",
+                                       "engine.py")):
+        return []
+    manifest_path = ctx.manifest_path or os.path.join(root, MANIFEST_REL)
+    rel = os.path.relpath(manifest_path, root).replace(os.sep, "/")
+    if not os.path.exists(manifest_path):
+        return [Finding(code="WIR002", path=rel, line=0,
+                        message=f"wire-format manifest not found — "
+                                f"generate it with `{REGEN}`")]
+    with open(manifest_path, encoding="utf-8") as f:
+        frozen = json.load(f)
+    current = build_manifest(root)
+    findings: List[Finding] = []
+    for section in sorted(set(frozen) | set(current)):
+        want, got = frozen.get(section), current.get(section)
+        if want != got:
+            findings.append(Finding(
+                code="WIR001", path=rel, line=0,
+                message=f"wire format drifted in `{section}`: "
+                        f"{_diff_section(section, want, got)} — if "
+                        f"intentional, regenerate with `{REGEN}` in "
+                        f"this same diff"))
+    return findings

@@ -23,7 +23,6 @@ lives in per-flow ``SimState`` instead of the bounded ``FlowCache``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

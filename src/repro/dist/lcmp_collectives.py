@@ -120,7 +120,7 @@ def set_route_liveness(alive) -> None:
     _TELEMETRY.alive = alive
 
 
-def schedule_buckets(bucket_ids) -> np.ndarray:
+def schedule_buckets(bucket_ids: np.ndarray) -> np.ndarray:
     """Two-stage LCMP selection over routes for a batch of bucket ids
     (``core.select.select_egress`` semantics, host-side): fused cost,
     keep the lower-cost half of live routes (>= 1), fmix32-hash each

@@ -14,20 +14,18 @@ Usage:
       --out experiments/dryrun.jsonl
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.dist.mesh_rules import make_rules
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
-from repro.launch.shapes import SHAPES, applicable, input_specs, skip_reason
+from repro.launch.shapes import SHAPES, input_specs, skip_reason
 from repro.models.arch import forward, init_params
 from repro.serve.decode import decode_step
 from repro.train.optim import adamw_init

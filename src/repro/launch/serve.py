@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.models.arch import forward, init_params
+from repro.models.arch import init_params
 from repro.serve.decode import decode_step, init_cache
 
 

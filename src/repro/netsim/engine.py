@@ -61,6 +61,13 @@ from repro.traffic.gen import FlowSet
 HIST = 8192          # history rings (steps); must exceed the max RTT and
                      # signal-delay offsets — build() validates this
 
+# Every history-ring scatter index is `t % HIST`, in-bounds by
+# construction, so the write sites state that instead of inheriting the
+# default FILL_OR_DROP (which would silently drop an out-of-bounds write
+# if the wrap ever regressed). Tests flip this to None to pin that both
+# modes are bit-identical for in-bounds indices.
+RING_SCATTER_MODE = "promise_in_bounds"
+
 # Policy name -> dense code. "sweep" is a meta-policy: the step function
 # dispatches on the per-experiment ``SimArrays.policy_code`` scalar instead
 # of a Python branch, so a vmapped batch can mix policies in one trace
@@ -480,7 +487,8 @@ def monitor_tick(t, st, ar: SimArrays, cfg: SimConfig):
     c_cong = congmod.calc_cong_cost(cong, ar.tables, cfg.congp)
     return dataclasses.replace(
         st, cong=cong, c_cong=c_cong,
-        hist_c=st.hist_c.at[:, jnp.asarray(t % HIST, jnp.int32)].set(c_cong))
+        hist_c=st.hist_c.at[:, jnp.asarray(t % HIST, jnp.int32)].set(
+            c_cong, mode=RING_SCATTER_MODE))
 
 
 def ctrl_tick(t, st, ar: SimArrays, cfg: SimConfig):

@@ -16,8 +16,6 @@ import dataclasses
 import functools
 from typing import Dict, Optional, Sequence
 
-import numpy as np
-
 from repro.netsim import engine as enginemod
 from repro.netsim import fluid, metrics, paths, scenarios
 from repro.netsim.engine import SimConfig
@@ -59,6 +57,29 @@ class ExpSpec:
     select: Optional[object] = None  # optional SelectParams override
     pathq: Optional[object] = None   # optional PathQParams override
     congp: Optional[object] = None   # optional CongParams override
+
+
+# Sweep-axis contract, machine-checked by `python -m repro.analysis`
+# (reprolint AXS001-AXS003): every ExpSpec field is either *static* — it
+# reaches the compiled trace through spec_to_cfg, so sweep cells that
+# differ in it cannot share a compiled program — or *dynamic* — it only
+# reshapes the padded per-cell flow tables, so cells that differ in it
+# MUST share one program. A new field that lands in neither table fails
+# lint until it is classified (or exempted with a justification).
+AXES_STATIC = (
+    "engine", "cc", "duration_us", "cap_scale", "sig_delay_scale",
+    "ctrl_period_us", "flowlet_gap_us", "redecide_period_us",
+    "n_subflows", "select", "pathq", "congp",
+)
+AXES_DYNAMIC = (
+    "workload", "load", "seed", "pairs", "bg_load", "load_sched",
+)
+AXES_EXEMPT = {
+    "topology": "enters the trace key via sweep.static_key (world shapes),"
+                " not via spec_to_cfg — cells never mix topologies",
+    "policy": "dynamic per-cell policy_code at runtime; the spec_to_cfg"
+              " read is overridden by static_key's policy='sweep' replace",
+}
 
 
 @functools.lru_cache(maxsize=32)

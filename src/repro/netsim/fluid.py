@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 # Shared multi-engine core — re-exported so `fluid.X` keeps working for
 # every name that predates the engine split.
+from repro.netsim import engine
 from repro.netsim.engine import (  # noqa: F401
     ENGINES, HIST, POLICIES, POLICY_CODES, REDECIDE_POLICIES, _NEVER,
     SimArrays, SimConfig, SimState, _cc_update, _path_queue_wait,
@@ -127,8 +128,10 @@ def make_step(ar: SimArrays, cfg: SimConfig):
         hslot = jnp.asarray(t % HIST, jnp.int32)
         st = dataclasses.replace(
             st, q_bytes=q,
-            hist_q=st.hist_q.at[:, hslot].set(q),
-            hist_u=st.hist_u.at[:, hslot].set(util),
+            hist_q=st.hist_q.at[:, hslot].set(
+                q, mode=engine.RING_SCATTER_MODE),
+            hist_u=st.hist_u.at[:, hslot].set(
+                util, mode=engine.RING_SCATTER_MODE),
             u_ewma=st.u_ewma * 0.99 + 0.01 * jnp.minimum(util, 1.0),
             serv_bytes=st.serv_bytes + served * dt)
 

@@ -178,7 +178,8 @@ def make_step(ar: SimArrays, cfg: SimConfig):
         pause = jnp.where(st.q_bytes > xoff, True,
                           jnp.where(st.q_bytes < xon, False, st.pfc_pause))
         hist_pause = st.hist_pause.at[:, jnp.asarray(t % HIST,
-                                                     jnp.int32)].set(pause)
+                                                     jnp.int32)].set(
+            pause, mode=engine.RING_SCATTER_MODE)
         st = dataclasses.replace(st, pfc_pause=pause, hist_pause=hist_pause)
         pause_flat = hist_pause.reshape(-1)
 
@@ -277,8 +278,10 @@ def make_step(ar: SimArrays, cfg: SimConfig):
         st = dataclasses.replace(
             st, fq=fq, q_bytes=q_new,
             delivered=st.delivered + delivered_add,
-            hist_q=st.hist_q.at[:, hslot].set(q_new),
-            hist_u=st.hist_u.at[:, hslot].set(util),
+            hist_q=st.hist_q.at[:, hslot].set(
+                q_new, mode=engine.RING_SCATTER_MODE),
+            hist_u=st.hist_u.at[:, hslot].set(
+                util, mode=engine.RING_SCATTER_MODE),
             u_ewma=st.u_ewma * 0.99 + 0.01 * jnp.minimum(util, 1.0),
             serv_bytes=st.serv_bytes + served)
 

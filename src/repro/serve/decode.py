@@ -12,8 +12,6 @@ token against a seq_len-sized cache.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -40,7 +40,7 @@ Families (``FAMILIES`` is wire format, pinned by the registry test):
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -9,14 +9,13 @@ optionally int8-compressed (repro.dist.compress).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.arch import ArchConfig, forward, init_params
-from repro.serve.decode import decode_step, init_cache
+from repro.serve.decode import decode_step
 from repro.train.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
 
 

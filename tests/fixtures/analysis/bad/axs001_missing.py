@@ -1,0 +1,18 @@
+"""Bad: an ExpSpec field (`extra_knob`) is in no AXES_* table."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpSpec:
+    engine: str = "fluid"
+    load: float = 0.3
+    extra_knob: int = 0
+
+
+AXES_STATIC = ("engine",)
+AXES_DYNAMIC = ("load",)
+AXES_EXEMPT = {}
+
+
+def spec_to_cfg(spec, scen):
+    return {"engine": spec.engine}

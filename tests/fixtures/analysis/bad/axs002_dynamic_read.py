@@ -1,0 +1,18 @@
+"""Bad: `load` is declared dynamic but spec_to_cfg reads it, so it
+would enter the trace key and recompile every sweep cell."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpSpec:
+    engine: str = "fluid"
+    load: float = 0.3
+
+
+AXES_STATIC = ("engine",)
+AXES_DYNAMIC = ("load",)
+AXES_EXEMPT = {}
+
+
+def spec_to_cfg(spec, scen):
+    return {"engine": spec.engine, "load": spec.load}

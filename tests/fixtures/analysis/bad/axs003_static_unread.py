@@ -1,0 +1,18 @@
+"""Bad: `cc` is declared static but spec_to_cfg never reads it, so
+cells differing only in `cc` would share one compiled config."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpSpec:
+    engine: str = "fluid"
+    cc: str = "dcqcn"
+
+
+AXES_STATIC = ("engine", "cc")
+AXES_DYNAMIC = ()
+AXES_EXEMPT = {}
+
+
+def spec_to_cfg(spec, scen):
+    return {"engine": spec.engine}

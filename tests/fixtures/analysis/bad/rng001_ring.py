@@ -1,0 +1,13 @@
+"""Bad: history-ring read without a `% HIST` wrap (guard present, so
+only RNG001 fires — the capacity guard alone does not make unwrapped
+offsets safe)."""
+HIST = 64
+MAX_DELAY = 8
+
+if MAX_DELAY >= HIST:
+    raise ValueError("history ring too small for the max delay")
+
+
+def read_back(hist_q, t, delay):
+    slot = t - delay
+    return hist_q[:, slot]

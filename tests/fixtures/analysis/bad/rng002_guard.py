@@ -1,0 +1,7 @@
+"""Bad: rings written with wrapped slots but no build-time capacity
+guard anywhere — wraps are only sound when offsets are validated."""
+HIST = 64
+
+
+def write(hist_c, t, val):
+    return hist_c.at[:, t % HIST].set(val, mode="promise_in_bounds")

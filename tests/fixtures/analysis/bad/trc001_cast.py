@@ -1,0 +1,9 @@
+"""Bad: float() applied to a traced value inside a jitted function."""
+import jax
+
+
+def run(x):
+    return float(x) + 1.0
+
+
+runner = jax.jit(run)

@@ -1,0 +1,11 @@
+"""Bad: Python `if` on a traced value inside a jitted function."""
+import jax
+
+
+def run(x):
+    if x.sum() > 0:
+        return x * 2.0
+    return x
+
+
+runner = jax.jit(run)

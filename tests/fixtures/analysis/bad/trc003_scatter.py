@@ -1,0 +1,17 @@
+"""Bad: traced-index scatter without explicit mode= inside a scan body."""
+import jax
+import jax.numpy as jnp
+
+
+def make_step(cfg: dict):
+    def step(carry, t):
+        hist = carry
+        hist = hist.at[t % 16].set(1.0)
+        return hist, ()
+    return step
+
+
+def run(hist, cfg: dict):
+    step = make_step(cfg)
+    out, _ = jax.lax.scan(step, hist, jnp.arange(8))
+    return out

@@ -1,0 +1,10 @@
+"""Bad: dtype-less np constructor (float64 default) in jitted code."""
+import jax
+import numpy as np
+
+
+def run(x):
+    return x + np.ones(4)
+
+
+runner = jax.jit(run)

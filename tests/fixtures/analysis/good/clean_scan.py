@@ -1,0 +1,51 @@
+"""Good: every pattern the checkers look for, done correctly — static
+casts and branches, wrapped ring slots with a capacity guard, explicit
+scatter mode, dtype'd np constructor, a fully classified ExpSpec."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HIST = 32
+MAX_DELAY = 8
+
+if MAX_DELAY >= HIST:
+    raise ValueError("history ring too small for the max delay")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpSpec:
+    engine: str = "fluid"
+    load: float = 0.3
+    topology: str = "testbed8"
+
+
+AXES_STATIC = ("engine",)
+AXES_DYNAMIC = ("load",)
+AXES_EXEMPT = {"topology": "trace key via world shapes, not spec_to_cfg"}
+
+
+def spec_to_cfg(spec, scen):
+    return {"engine": spec.engine}
+
+
+def make_step(cfg: dict):
+    scale = float(cfg["scale"])          # cast of a static: fine
+
+    def step(carry, t):
+        hist_q = carry
+        slot = t % HIST
+        hist_q = hist_q.at[:, slot].set(scale, mode="promise_in_bounds")
+        if cfg["twice"]:                 # branch on a static: fine
+            hist_q = hist_q + np.float32(1.0)
+        bias = np.zeros(4, np.float32)   # dtype'd np constructor: fine
+        return hist_q, bias.sum()
+
+    return step
+
+
+def run(hist_q, cfg: dict):
+    step = make_step(cfg)
+    out, _ = jax.lax.scan(step, hist_q, jnp.arange(8))
+    return out

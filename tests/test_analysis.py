@@ -1,0 +1,183 @@
+"""reprolint: fixture corpus, CLI contract, wire-format freeze, and the
+bit-for-bit regression for the ring-scatter mode= fixes it surfaced."""
+import dataclasses
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.analysis import CHECKS, CODES, run_checks
+from repro.analysis.wire import MANIFEST_REL, build_manifest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIX = os.path.join(REPO, "tests", "fixtures", "analysis")
+
+# bad fixture -> the exact finding code it must raise (and nothing else)
+BAD_EXPECT = {
+    "trc001_cast.py": "TRC001",
+    "trc002_branch.py": "TRC002",
+    "trc003_scatter.py": "TRC003",
+    "trc004_np64.py": "TRC004",
+    "rng001_ring.py": "RNG001",
+    "rng002_guard.py": "RNG002",
+    "axs001_missing.py": "AXS001",
+    "axs002_dynamic_read.py": "AXS002",
+    "axs003_static_unread.py": "AXS003",
+}
+
+
+# ------------------------------------------------------- fixture corpus
+@pytest.mark.parametrize("fname,code", sorted(BAD_EXPECT.items()))
+def test_bad_fixture_raises_exactly_its_code(fname, code):
+    path = os.path.join(FIX, "bad", fname)
+    rep = run_checks(os.path.join(FIX, "bad"), files=[path])
+    assert sorted({f.code for f in rep.findings}) == [code], rep.findings
+    assert len(rep.findings) == 1, rep.findings
+    assert all(f.code in CODES for f in rep.findings)
+
+
+def test_bad_corpus_covers_every_nonwire_code():
+    # WIR001/WIR002 are exercised against the real repo below; every
+    # other code must have a dedicated bad fixture
+    covered = set(BAD_EXPECT.values()) | {"WIR001", "WIR002"}
+    assert covered == set(CODES)
+
+
+def test_good_fixtures_clean():
+    good = os.path.join(FIX, "good")
+    files = [os.path.join(good, f) for f in sorted(os.listdir(good))
+             if f.endswith(".py")]
+    rep = run_checks(good, files=files)
+    assert rep.ok, rep.findings
+
+
+def test_full_repo_smoke_clean():
+    rep = run_checks(REPO)
+    assert rep.ok, "\n".join(f.format() for f in rep.findings)
+    assert rep.num_files > 50          # really saw src/ and tests/
+    assert not any("fixtures" in p for p in
+                   (f.path for f in rep.findings + rep.suppressed))
+
+
+def test_exemption_comment_suppresses(tmp_path):
+    f = tmp_path / "exempt.py"
+    f.write_text(
+        "import jax\n\n\ndef run(x):\n"
+        "    # reprolint: ignore[TRC001] build-time scalar\n"
+        "    return float(x)\n\n\nrunner = jax.jit(run)\n")
+    rep = run_checks(str(tmp_path), files=[str(f)])
+    assert rep.ok
+    assert [s.code for s in rep.suppressed] == ["TRC001"]
+
+
+def test_unknown_check_name_rejected():
+    with pytest.raises(ValueError, match="unknown check"):
+        run_checks(REPO, checks=["nope"])
+    assert set(CHECKS) == {"tracing", "axes", "wire", "rings"}
+
+
+# ------------------------------------------------------------------ CLI
+def _cli(args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run([sys.executable, "-m", "repro.analysis"] + args,
+                          capture_output=True, text=True, env=env, cwd=cwd)
+
+
+def test_cli_fails_on_seeded_violation_github_format(tmp_path):
+    # the CI lint job runs exactly this module; prove it goes red on a
+    # seeded violation, with a GitHub annotation naming the code
+    shutil.copy(os.path.join(FIX, "bad", "trc001_cast.py"), tmp_path)
+    p = _cli(["--root", str(tmp_path), "--format", "github"])
+    assert p.returncode == 1, p.stdout + p.stderr
+    assert "::error file=trc001_cast.py" in p.stdout
+    assert "reprolint TRC001" in p.stdout
+
+
+def test_cli_json_clean_tree(tmp_path):
+    shutil.copytree(os.path.join(FIX, "good"), tmp_path / "tree")
+    p = _cli(["--root", str(tmp_path / "tree"), "--format", "json"])
+    assert p.returncode == 0, p.stdout + p.stderr
+    data = json.loads(p.stdout)
+    assert data["ok"] is True and data["findings"] == []
+
+
+def test_cli_check_subset(tmp_path):
+    shutil.copy(os.path.join(FIX, "bad", "trc002_branch.py"), tmp_path)
+    p = _cli(["--root", str(tmp_path), "--checks", "rings,axes"])
+    assert p.returncode == 0, p.stdout   # tracing not selected -> clean
+
+
+# ----------------------------------------------------- wire-format freeze
+def test_wire_manifest_is_current():
+    with open(os.path.join(REPO, MANIFEST_REL), encoding="utf-8") as f:
+        frozen = json.load(f)
+    assert frozen == build_manifest(REPO), (
+        "wire-format manifest is stale — regenerate with "
+        "`python -m repro.analysis --write-manifest`")
+
+
+def test_wire_drift_and_missing_manifest(tmp_path):
+    man = build_manifest(REPO)
+    tampered = dict(man)
+    tampered["sched_families"] = list(man["sched_families"]) + ["bogus"]
+    mp = tmp_path / "manifest.json"
+    mp.write_text(json.dumps(tampered))
+    rep = run_checks(REPO, checks=["wire"], manifest=str(mp))
+    assert [f.code for f in rep.findings] == ["WIR001"]
+    assert "sched_families" in rep.findings[0].message
+    assert "--write-manifest" in rep.findings[0].message
+
+    rep = run_checks(REPO, checks=["wire"],
+                     manifest=str(tmp_path / "missing.json"))
+    assert [f.code for f in rep.findings] == ["WIR002"]
+
+
+def test_wire_manifest_freezes_the_advertised_surfaces():
+    man = build_manifest(REPO)
+    assert man["policy_codes"]["lcmp"] == 0 and man["policy_codes"]["ecmp"] == 2
+    assert "const" in man["sched_families"]
+    assert "testbed8" in man["scenario_names"]
+    assert man["csv_schemas"]["fig5_testbed.csv"][0] == "load"
+    assert "rows_us" in man["bench_keys"]["top"]
+
+
+# ------------------------- ring-scatter mode= fixes (bit-for-bit pin)
+@pytest.mark.parametrize("engine_name", ["fluid", "packet"])
+def test_ring_scatter_mode_is_bit_identical(engine_name):
+    """reprolint TRC003 fixes added mode="promise_in_bounds" to the six
+    history-ring scatters. All ring slots are `t % HIST`, in-bounds by
+    construction, so the mode change must be a pure no-op: the final
+    state under promise_in_bounds must equal the default-mode state
+    bit for bit."""
+    from repro.netsim import engine as eng
+    from repro.netsim import experiment, fluid, packet
+    mod = {"fluid": fluid, "packet": packet}[engine_name]
+    spec = experiment.ExpSpec(topology="testbed8", load=0.5,
+                              engine=engine_name, duration_us=3_000)
+    _, table, flows, cfg = experiment.build_experiment(spec)
+
+    def final_state(mode):
+        old = eng.RING_SCATTER_MODE
+        eng.RING_SCATTER_MODE = mode
+        try:
+            arrs, st = mod.build(table, flows, cfg)
+            # fresh jit wrapper: the mode is baked into the trace, so a
+            # cached executable would hide a behavioral difference
+            run = jax.jit(mod.run_impl, static_argnames=("cfg",))
+            return run(arrs, st, cfg)
+        finally:
+            eng.RING_SCATTER_MODE = old
+
+    a = final_state("promise_in_bounds")
+    b = final_state(None)                 # jax default (FILL_OR_DROP)
+    la = jax.tree.leaves(dataclasses.asdict(a))
+    lb = jax.tree.leaves(dataclasses.asdict(b))
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert (x == y).all(), "ring scatter mode changed simulation state"

@@ -1,5 +1,4 @@
 """Checkpoint robustness + launcher auto-resume coverage."""
-import os
 import sys
 
 import jax

@@ -1,7 +1,6 @@
 """Unit + property tests for the path-quality representation (paper §3.2)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import pathq, tables

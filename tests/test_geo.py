@@ -12,7 +12,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.netsim import paths, scenarios, topo
+from repro.netsim import scenarios, topo
 from repro.netsim.engine import POLICY_CODES
 from repro.netsim.experiment import build_world
 from repro.traffic import sched

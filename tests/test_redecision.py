@@ -14,7 +14,7 @@ from repro.core.select import ecmp_select
 from repro.netsim import fluid, metrics, packet, paths, sweep, topo
 from repro.netsim.engine import (POLICY_CODES, REDECIDE_POLICIES, SimConfig,
                                  attach_link_caps)
-from repro.netsim.experiment import ExpSpec, build_experiment, run_experiment
+from repro.netsim.experiment import ExpSpec, run_experiment
 from repro.traffic.gen import FlowSet, generate
 
 

@@ -4,7 +4,6 @@ unknown names with a helpful message (no raw KeyError)."""
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 from repro.netsim import paths, scenarios, topo

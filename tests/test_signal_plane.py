@@ -10,7 +10,7 @@ import pytest
 
 from repro.core.pathq import calc_path_quality
 from repro.netsim import fluid, paths, scenarios, topo
-from repro.netsim.experiment import ExpSpec, build_experiment, run_experiment
+from repro.netsim.experiment import ExpSpec, build_experiment
 from repro.netsim.fluid import SimConfig
 
 
@@ -21,6 +21,7 @@ def test_remote_congestion_invisible_before_one_way_prop():
     d = 50
     hist_c = np.zeros((2, fluid.HIST), np.int32)
     t0 = 1000
+    # reprolint: ignore[RNG001] host-side setup writes one in-range slot
     hist_c[1, t0] = 200                     # remote hop flags congestion
     pl = jnp.asarray([[0, 1, -1]])          # one path: local hop, remote hop
     sd = jnp.asarray([[0, d, 0]])           # remote signal is d steps away

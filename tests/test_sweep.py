@@ -6,7 +6,6 @@ import subprocess
 import sys
 
 import numpy as np
-import pytest
 
 from repro.netsim import sweep
 from repro.netsim.experiment import ExpSpec
