@@ -699,6 +699,103 @@ def fig_geo(scale="default", sequential=False, engine="both") -> List[Row]:
     return rows
 
 
+# ----------------------- training co-simulation (repro.cosim, closing loop)
+def fig_training(scale="default", sequential=False,
+                 engine="both") -> List[Row]:
+    """[Training cosim] The training job IS the workload: ``repro.cosim``
+    lowers a ``configs/`` smoke architecture + a ``launch/shapes`` train
+    cell through ``dist.lcmp_collectives``' exact bucket accounting into
+    periodic reduce-scatter / all-gather bursts on the measured wan2000
+    pair, layered over Poisson cross-traffic (``bg_load``), and scores
+    each policy by *iteration time* under barrier semantics — the
+    optimizer waits on the straggler bucket, so one slow route taxes the
+    whole step. Grid: model x bg_load x degraded-haul (the fattest
+    haul's first OTN span silently drops to a tenth of capacity a third
+    of the way through training) x {ECMP, WCMP, FatPaths, MatchRDMA,
+    LCMP} on BOTH engines (this suite ignores --engine). Percentiles
+    are ``pct_strict`` — an iteration that never completes counts as
+    +inf, not excluded, so stranding a step can only hurt. Ordering
+    rows ``fig_training/ordering/<engine>/<model>`` assert LCMP
+    iteration p50/p99 at or below every baseline at the loaded design
+    point (bg=0.15, degraded) with LCMP flow completion above the
+    floor; the light-load and healthy-haul arms ship in the CSV as
+    contrast — there the policies converge (no queueing to dodge),
+    which is the honest boundary of the claim. MatchRDMA (segmented
+    per-span rate matching) reads the same delayed congestion plane
+    LCMP does; its winner-take-all matched-rate argmax herds onto one
+    haul a telemetry RTT late under pressure, which is exactly where
+    the ``fig_training/degradation`` rows show its tail blow up."""
+    del engine
+    from repro.cosim import build_plan, iteration_stats
+    fig = "fig_training"
+    dur = _DUR[scale]
+    deg_ms = dur // 3000
+    base_top = "wan2000:dcs=8,segs=2,chords=4"
+    deg_top = f"{base_top},deg_ms={deg_ms},deg_factor=0.1"
+    models = ("qwen3-4b", "gemma2-9b")
+    bgs = (0.1, 0.15)
+    design_bg = 0.15
+    pols = ("ecmp", "wcmp", "fatpaths", "matchrdma", "lcmp")
+
+    specs = [ExpSpec(topology=top, policy=pol, engine=eng, load=0.7,
+                     bg_load=bg, duration_us=dur, seed=9, pairs="main",
+                     cap_scale=0.0625, cosim_model=m, cosim_iters=6)
+             for eng in ("fluid", "packet")
+             for top in (base_top, deg_top)
+             for m in models for bg in bgs for pol in pols]
+    results, per_cell, summary = _sweep(fig, specs, sequential)
+
+    rows, csv, by, plans = [summary], [], {}, {}
+    for res in results:
+        s = res.spec
+        key = (s.topology, s.cosim_model)
+        if key not in plans:
+            scen, table = build_world(s.topology)
+            plans[key] = build_plan(s, scen, table)
+        it = iteration_stats(plans[key], res.flows, res.final)
+        deg = int(s.topology == deg_top)
+        by[(s.engine, deg, s.cosim_model, s.bg_load, s.policy)] = (
+            it, res.stats)
+        csv.append(f"{s.engine},{s.cosim_model},{s.bg_load:g},{deg},"
+                   f"{s.policy},{it.pct_strict(50):.3f},"
+                   f"{it.pct_strict(99):.3f},{it.iters_done},"
+                   f"{it.iters_total},{_comp_cols(res.stats)}")
+        if deg and s.bg_load == design_bg:
+            rows.append((f"{fig}/{s.engine}/{s.cosim_model}/{s.policy}",
+                         per_cell,
+                         f"iter_p50={it.pct_strict(50):.2f}ms;"
+                         f"iter_p99={it.pct_strict(99):.2f}ms;"
+                         f"iters={it.iters_done}/{it.iters_total};"
+                         f"crate={res.stats.completion_rate:.4f}"))
+    # acceptance ordering at the design point: LCMP iteration p50/p99 at
+    # or below EVERY baseline (matchrdma included) per engine x model.
+    # The completion floor applies to LCMP only — pct_strict already
+    # charges a baseline's stranded iterations as +inf, so comparing
+    # against an under-completing baseline is conservative (fig_geo's
+    # argument, one level up the stack).
+    for eng in ("fluid", "packet"):
+        for m in models:
+            lc, lc_st = by[(eng, 1, m, design_bg, "lcmp")]
+            ok = (lc_st.completion_rate >= COMPLETION_FLOOR) and all(
+                lc.pct_strict(50) <= by[(eng, 1, m, design_bg, p)][0].pct_strict(50)
+                and lc.pct_strict(99) <= by[(eng, 1, m, design_bg, p)][0].pct_strict(99)
+                for p in pols if p != "lcmp")
+            rows.append((f"{fig}/ordering/{eng}/{m}", 0.0,
+                         f"lcmp_p50={lc.pct_strict(50):.2f};"
+                         f"lcmp_p99={lc.pct_strict(99):.2f};holds={ok}"))
+        # what the mid-run degradation costs each policy's tail: healthy
+        # vs degraded iteration p99 at the design load (first model)
+        rows.append((f"{fig}/degradation/{eng}", 0.0,
+                     ";".join(
+                         f"{p}_dp99={by[(eng, 1, models[0], design_bg, p)][0].pct_strict(99) - by[(eng, 0, models[0], design_bg, p)][0].pct_strict(99):+.2f}"
+                         for p in pols)))
+    rows.append(_completion_flags(fig, results))
+    _csv("fig_training.csv",
+         "engine,model,bg_load,degraded,policy,iter_p50_ms,iter_p99_ms,"
+         "iters_done,iters_total,completed,offered,completion_rate", csv)
+    return rows
+
+
 # -------------------------------------- cross-engine fidelity (§6, new)
 def fidelity_bench(scale="default", sequential=False,
                    engine="both") -> List[Row]:

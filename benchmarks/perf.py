@@ -46,6 +46,13 @@ _SPEC = dict(topology="testbed8", load=0.4, duration_us=300_000, seed=1)
 _GEO_SPEC = dict(topology="geo:dcs=20,chords=10", load=0.43, bg_load=0.1,
                  duration_us=60_000, seed=9, cap_scale=0.0625,
                  load_sched="diurnal:amp=0.8,segs=24")
+# cosim cost centers (shorter horizon again): the model-config resolve +
+# plan build + overlay path, then the fluid scan with the collective
+# rows in the flow table
+_COSIM_SPEC = dict(topology="wan2000:dcs=8,segs=2,chords=4", load=0.5,
+                   bg_load=0.1, duration_us=60_000, seed=9,
+                   cap_scale=0.0625, cosim_model="qwen3-4b",
+                   cosim_iters=4)
 
 
 def _scan_times(engine: str, spec_kw: Dict = _SPEC,
@@ -83,6 +90,16 @@ def collect() -> Dict[str, float]:
     build_experiment(ExpSpec(engine="fluid", policy="lcmp", **_GEO_SPEC))
     rows["geo_build_world_and_sched_flows"] = (time.perf_counter() - t0) * 1e6
     rows.update(_scan_times("fluid", _GEO_SPEC, prefix="geo_"))
+    # cosim cost centers: configs registry resolve + bucket-plan build +
+    # overlay merge (cold caches), then the fluid scan over the merged
+    # flow table
+    build_world.cache_clear()
+    from repro.cosim.workload import _smoke_param_count
+    _smoke_param_count.cache_clear()
+    t0 = time.perf_counter()
+    build_experiment(ExpSpec(engine="fluid", policy="lcmp", **_COSIM_SPEC))
+    rows["cosim_plan_and_overlay_flows"] = (time.perf_counter() - t0) * 1e6
+    rows.update(_scan_times("fluid", _COSIM_SPEC, prefix="cosim_"))
     for name, us, _ in kernel_bench.all_benches():
         rows[name] = us               # rows already carry the kernel/ tag
     return rows

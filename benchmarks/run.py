@@ -16,9 +16,11 @@ import argparse
 import sys
 import traceback
 
-# suites that pick their own engine(s): fidelity, fig_multipath and
-# fig_geo run both backends by design; kernels have no simulation engine
-_ENGINE_AGNOSTIC = ("fidelity", "fig_multipath", "fig_geo", "kernels")
+# suites that pick their own engine(s): fidelity, fig_multipath, fig_geo
+# and fig_training run both backends by design; kernels have no
+# simulation engine
+_ENGINE_AGNOSTIC = ("fidelity", "fig_multipath", "fig_geo", "fig_training",
+                    "kernels")
 
 
 def main() -> None:
@@ -69,6 +71,7 @@ def main() -> None:
         "fig_large": figures.fig_large,
         "fig_multipath": figures.fig_multipath,
         "fig_geo": figures.fig_geo,
+        "fig_training": figures.fig_training,
         "staleness": figures.staleness_ablation,
         "scenarios": figures.scenarios_bench,
         "fidelity": figures.fidelity_bench,

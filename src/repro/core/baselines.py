@@ -97,6 +97,36 @@ def fatpaths(flow_ids, path_len, valid, c_cong, cong_thresh: int = 230):
     return ecmp_select(flow_ids, active_set)
 
 
+def matchrdma(flow_ids, span_avail, valid):
+    """MatchRDMA-style segmented per-span rate matching (arXiv
+    2604.23932, adapted to the WAN candidate-set setting): long-haul
+    RDMA throughput is set by the *tightest OTN span* en route, so each
+    candidate is scored by its matched rate — the minimum over its spans
+    of effective capacity x headroom — and the flow takes the candidate
+    whose bottleneck span currently admits the most. Degradation-aware
+    (effective capacities) and utilization-aware (headroom), but
+    delay-oblivious: on delay-dominated long hauls it keeps matching
+    toward fat-but-slow spans, exactly the capacity-centric gap the LCMP
+    comparison probes.
+
+    ``span_avail``: (F, P) or (P,) int32 matched-rate score per candidate
+    (min over spans, computed by the engine from its live link state).
+    Ties are hashed for determinism (same rotation trick as ``ucmp``).
+    """
+    avail = jnp.asarray(span_avail, jnp.int32)
+    cost = jnp.where(jnp.asarray(valid, bool), -avail, _BIG)
+    F = jnp.asarray(flow_ids).shape[0]
+    cost = jnp.broadcast_to(cost, (F,) + cost.shape[-1:])
+    P = cost.shape[-1]
+    rot = (fmix32(flow_ids) % jnp.uint32(P)).astype(jnp.int32)
+    idx = (jnp.arange(P, dtype=jnp.int32)[None, :] + rot[:, None]) % P
+    rot_cost = jnp.take_along_axis(cost, idx, axis=-1)
+    best = jnp.argmin(rot_cost, axis=-1).astype(jnp.int32)
+    choice = jnp.take_along_axis(idx, best[:, None], axis=-1)[:, 0]
+    any_valid = jnp.asarray(valid, bool).sum(-1) > 0
+    return jnp.where(any_valid, choice, -1)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class RedTEState:

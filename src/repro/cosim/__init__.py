@@ -1,0 +1,16 @@
+"""Training/network co-simulation (ROADMAP item 1): the ``repro.dist``
+collective layer meets the netsim engines.
+
+``workload`` turns a ``configs/`` model + ``launch/shapes.py`` cell +
+the ``dist.lcmp_collectives`` bucket schedule into deterministic
+per-iteration reduce-scatter / all-gather flow bursts overlaid on the
+Poisson background (``CosimPlan`` / ``build_plan`` / ``overlay``);
+``iterate`` scores the simulated run in training terms — per-iteration
+makespan under barrier semantics, straggler attribution per route — and
+feeds measured bucket times back into the collective layer's Q/T/D
+telemetry (``feed_route_telemetry``).
+"""
+from repro.cosim.workload import CosimPlan, build_plan, overlay  # noqa: F401
+from repro.cosim.iterate import (IterStats, feed_route_telemetry,  # noqa: F401
+                                 iteration_stats, pair_path_slots,
+                                 straggler_routes)

@@ -102,6 +102,29 @@ class RouteTelemetry:
         self.dur = np.where(ms >= self.HIGH_MS, self.dur + 1, self.dur >> 1)
         self.last_step = int(step)
 
+    def observe_measured(self, bucket_ms, bucket_routes, step: int):
+        """Feed *externally measured* per-bucket wall times (ms) into the
+        Q/T/D registers — the co-simulation seam (``repro.cosim``): bucket
+        times come from the netsim engines instead of the launcher's
+        synthetic wall clock. ``bucket_routes`` is the route each bucket
+        was bound to (``schedule_buckets`` output; -1 = unrouted, the
+        sample is dropped). A route's sample is the MAX over its buckets
+        (barrier semantics — the straggler bucket is what the step
+        waits on); a route with no bucket this step holds its current
+        level, so its delta is 0 and the trend register decays exactly as
+        an idle port's would."""
+        bucket_ms = np.asarray(bucket_ms, np.int64).reshape(-1)
+        routes = np.asarray(bucket_routes, np.int64).reshape(-1)
+        if bucket_ms.shape != routes.shape:
+            raise ValueError(f"bucket_ms {bucket_ms.shape} and "
+                             f"bucket_routes {routes.shape} must align")
+        ok = (routes >= 0) & (routes < self.n)
+        # a sampled route's level is its straggler bucket, even when that
+        # is *below* the held level (recovery must be observable too)
+        slow = np.full(self.n, -(1 << 60), np.int64)
+        np.maximum.at(slow, routes[ok], bucket_ms[ok])
+        self.observe(np.where(slow > -(1 << 60), slow, self.cur), step)
+
     def cong_scores(self) -> np.ndarray:
         """C_cong per route in [0, 255] (Eqs. 4-5 shape: (2Q+T+D) >> 2)."""
         q = np.minimum(self.cur >> 2, 255)

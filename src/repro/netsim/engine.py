@@ -86,6 +86,7 @@ POLICY_CODES = {
     "fatpaths": 6,   # layered min-stretch routing + flowlet re-hash
     "amp": 7,        # multi-subflow transport (per-subflow ECMP hash)
     "lcmp_r": 8,     # ablation: LCMP with periodic mid-flow re-decision
+    "matchrdma": 9,  # segmented per-span rate matching on OTN hauls
 }
 POLICIES = tuple(POLICY_CODES)
 # policies whose law re-decides mid-flow when the engine's eligibility
@@ -580,6 +581,22 @@ def decide(t, fid, pair, st: SimState, ar: SimArrays, cfg: SimConfig,
         if policy == "fatpaths":
             return bl.fatpaths(fid, ar.path_len[cpad], valid, c_cong,
                                cong_thresh=cfg.select.cong_fallback)
+        if policy == "matchrdma":
+            # matched rate per candidate: the tightest span's *effective*
+            # capacity (degrade schedule applied at decision time — the
+            # per-span rate matching) x the congestion headroom seen at
+            # the ingress. The headroom reads the SAME delayed signal
+            # plane LCMP does (c_cong via hist_c + path_sig_delay) — a
+            # rate-matching loop learns about congestion one telemetry
+            # RTT late too, no oracle. Padding hops never bind the min.
+            eff = ar.link_cap_gbps * jnp.where(
+                t >= ar.link_deg_step, ar.link_deg_factor, 1.0)
+            lidx = jnp.maximum(hop, 0)
+            bneck = jnp.where(hop >= 0, eff[lidx],
+                              jnp.float32(1e9)).min(-1)          # (N, K)
+            avail = bneck * (256 - c_cong).astype(jnp.float32)
+            return bl.matchrdma(
+                fid, jnp.minimum(avail, 1e9).astype(jnp.int32), valid)
         raise ValueError(policy)
 
     if cfg.policy == "sweep":

@@ -54,6 +54,15 @@ class ExpSpec:
     flowlet_gap_us: int = 0          # packet engine: flowlet idle gap
     redecide_period_us: int = 0      # fluid engine: re-decision epoch
     n_subflows: int = 1              # amp: subflows per flow (gen + metrics)
+    # training co-simulation overlay (repro.cosim): a configs/ arch alias
+    # ("" = off — the flow tables, and therefore every result, stay
+    # bit-for-bit the legacy output). All four are dynamic axes: they
+    # only append deterministic collective rows to the flow tables,
+    # never touch the compiled program.
+    cosim_model: str = ""            # e.g. "qwen3-4b"; "" disables cosim
+    cosim_cell: str = "train_4k"     # launch/shapes.py train cell
+    cosim_iters: int = 6             # training iterations over duration_us
+    cosim_compress: int = 1          # int8+scales wire (dist.compress)
     select: Optional[object] = None  # optional SelectParams override
     pathq: Optional[object] = None   # optional PathQParams override
     congp: Optional[object] = None   # optional CongParams override
@@ -73,6 +82,7 @@ AXES_STATIC = (
 )
 AXES_DYNAMIC = (
     "workload", "load", "seed", "pairs", "bg_load", "load_sched",
+    "cosim_model", "cosim_cell", "cosim_iters", "cosim_compress",
 )
 AXES_EXEMPT = {
     "topology": "enters the trace key via sweep.static_key (world shapes),"
@@ -134,11 +144,22 @@ def make_flows(spec: ExpSpec, scen: scenarios.Scenario, table):
             spec.load_sched, spec.duration_us, table, scen,
             fg_ids, bg_ids or ())
         kw = dict(sched_t=sched_t, load_rows=fg_rows, bg_rows=bg_rows)
-    return generate(table, cdfmod.WORKLOADS[spec.workload], spec.load,
-                    spec.duration_us, pair_ids=fg_ids,
-                    seed=spec.seed, cap_scale=spec.cap_scale,
-                    bg_pair_ids=bg_ids, bg_load=spec.bg_load,
-                    n_subflows=spec.n_subflows, **kw)
+    fs = generate(table, cdfmod.WORKLOADS[spec.workload], spec.load,
+                  spec.duration_us, pair_ids=fg_ids,
+                  seed=spec.seed, cap_scale=spec.cap_scale,
+                  bg_pair_ids=bg_ids, bg_load=spec.bg_load,
+                  n_subflows=spec.n_subflows, **kw)
+    if spec.cosim_model:
+        # overlay the training job's collective bursts AFTER the full
+        # legacy generation — the plan is rng-free and the merge is a
+        # stable sort, so background rows stay bit-for-bit (pinned by
+        # tests/test_cosim.py). Imported lazily: the cosim layer pulls
+        # in the model-config registry, which plain netsim runs never
+        # need.
+        from repro.cosim import workload as cosim_workload
+        plan = cosim_workload.build_plan(spec, scen, table)
+        fs = cosim_workload.overlay(fs, plan)
+    return fs
 
 
 def spec_to_cfg(spec: ExpSpec, scen: scenarios.Scenario) -> SimConfig:

@@ -105,6 +105,17 @@ def fct_stats(final: SimState, table: PathTable, flows: FlowSet,
                     completed=int(done.sum()), offered=offered)
 
 
+def completion_wall_us(final: SimState, flows: FlowSet) -> np.ndarray:
+    """(F,) wall-clock completion time per flow row: arrival plus the
+    engine's FCT *duration*; NaN where the flow never delivered. The
+    barrier primitive ``repro.cosim.iterate`` builds iteration makespans
+    from (an iteration ends at the max wall completion of its buckets,
+    not at the max duration — late-arriving fast buckets still gate)."""
+    done = np.asarray(final.done)
+    wall = np.asarray(flows.arrival_us, np.float64) + np.asarray(final.fct_us)
+    return np.where(done, wall, np.nan)
+
+
 def fg_bg_stats(final: SimState, table: PathTable, flows: FlowSet,
                 cfg: SimConfig, overall: FCTStats = None):
     """(foreground, background) FCTStats — the measured pairs vs the

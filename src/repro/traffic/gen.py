@@ -62,6 +62,10 @@ class FlowSet:
     # ordinary one-flow-per-row sets; when set, metrics score the PARENT
     # (done = all subflows done, FCT = last subflow, size = sum).
     subflow_of: Optional[np.ndarray] = None   # (F,) int32
+    # co-simulated collective rows (repro.cosim): row -> index into the
+    # CosimPlan's bucket-flow arrays, -1 for ordinary (background) rows.
+    # None for sets with no overlay — the legacy wire shape exactly.
+    cosim_of: Optional[np.ndarray] = None     # (F,) int32
     # dosing telemetry, one row per dosed pair (None for hand-built sets)
     dose_pair: Optional[np.ndarray] = None    # (P,) int32 pair ids
     dose_target: Optional[np.ndarray] = None  # (P,) float64 target bytes/us

@@ -1,0 +1,352 @@
+"""Training co-simulation contracts (``repro.cosim``): the collective
+overlay keeps the legacy background rng draw sequence **bit-for-bit**
+(property-tested over seeds/loads), default cosim knobs are inert at
+the flow-table AND engine level, the four cosim ExpSpec fields batch as
+dynamic sweep axes on both engines (matchrdma included), iteration
+makespans follow barrier semantics with survivorship-safe percentiles,
+and the measured-time feedback seam demotes a persistently slow
+simulated route in ``dist.lcmp_collectives``' scheduler."""
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cosim import (build_plan, feed_route_telemetry, iteration_stats,
+                         overlay, pair_path_slots, straggler_routes)
+from repro.cosim.workload import (GRAD_BYTES_PER_PARAM, PODS, CosimPlan,
+                                  bucket_wire_bytes)
+from repro.dist import lcmp_collectives as lc
+from repro.dist.lcmp_collectives import BUCKET_ELEMS
+from repro.kernels.qsr_int8 import BLOCK
+from repro.netsim import sweep
+from repro.netsim.experiment import ExpSpec, build_world, make_flows
+
+TOP = "wan2000:dcs=8,segs=2,chords=4"
+
+
+def _spec(**kw):
+    base = dict(topology=TOP, load=0.3, duration_us=60_000, seed=3,
+                cap_scale=0.0625, cosim_model="qwen3-4b", cosim_iters=4)
+    base.update(kw)
+    return ExpSpec(**base)
+
+
+# ----------------------------------------------------------- plan structure
+def test_plan_matches_collective_accounting():
+    """The plan's bucket count and per-leg wire bytes are exactly the
+    ``lcmp_pod_reduce`` accounting — bucketization by BUCKET_ELEMS,
+    int8 + one f32 scale per BLOCK when compressed, times the
+    (pods-1)/pods fraction each collective leg moves."""
+    scen, table = build_world(TOP)
+    spec = _spec()
+    plan = build_plan(spec, scen, table)
+    params = plan.param_count
+    nb = -(-params // BUCKET_ELEMS)
+    assert plan.n_buckets == nb
+    assert plan.num_rows == spec.cosim_iters * 2 * nb   # RS + AG per iter
+    wire = bucket_wire_bytes(params, True)
+    lens = np.minimum((np.arange(nb) + 1) * BUCKET_ELEMS,
+                      params) - np.arange(nb) * BUCKET_ELEMS
+    np.testing.assert_array_equal(wire, lens + 4 * (-(-lens // BLOCK)))
+    assert bucket_wire_bytes(params, False).sum() \
+        == GRAD_BYTES_PER_PARAM * params
+    rs = plan.phase_of == 0
+    np.testing.assert_allclose(
+        plan.size_bytes[rs][:nb], wire * (PODS - 1) / PODS)
+    # deterministic and rng-free: same spec, same rows
+    again = build_plan(spec, scen, table)
+    np.testing.assert_array_equal(plan.arrival_us, again.arrival_us)
+    np.testing.assert_array_equal(plan.flow_id, again.flow_id)
+    assert (plan.flow_id != 0).all()
+
+
+def test_plan_phases_and_pairs():
+    """RS bursts stagger inside the first quarter of each iteration on
+    the forward pair; AG bursts follow half a period later on the
+    reverse pair (wan2000 advertises both directions)."""
+    scen, table = build_world(TOP)
+    spec = _spec()
+    plan = build_plan(spec, scen, table)
+    pidx = table.pair_index()
+    fwd = pidx[scen.main_pair]
+    rev = pidx[(scen.main_pair[1], scen.main_pair[0])]
+    rs, ag = plan.phase_of == 0, plan.phase_of == 1
+    assert (plan.pair_id[rs] == fwd).all()
+    assert (plan.pair_id[ag] == rev).all()
+    rel = plan.arrival_us - plan.iter_start_us(plan.iter_of)
+    assert (rel[rs] < plan.period_us * 0.25).all()
+    assert (rel[ag] >= plan.period_us * 0.5).all()
+    assert (rel < plan.period_us).all()
+
+
+def test_plan_validation():
+    scen, table = build_world(TOP)
+    with pytest.raises(ValueError, match="train cell"):
+        build_plan(_spec(cosim_cell="prefill_32k"), scen, table)
+    with pytest.raises(ValueError, match="cosim_iters"):
+        build_plan(_spec(cosim_iters=0), scen, table)
+
+
+# ---------------------------------------- background bit-for-bit (property)
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=7),
+       st.sampled_from([0.15, 0.3, 0.5]),
+       st.sampled_from([0.0, 0.1]))
+def test_overlay_keeps_background_bitforbit(seed, load, bg):
+    """THE invariant: for arbitrary seed/load/bg_load, every background
+    row of the cosim flow table carries the exact legacy value, in the
+    exact legacy relative order — the collective rows only interleave.
+    (The plan is rng-free and the merge sort is stable.)"""
+    scen, table = build_world(TOP)
+    legacy = make_flows(_spec(seed=seed, load=load, bg_load=bg,
+                              cosim_model=""), scen, table)
+    cos = make_flows(_spec(seed=seed, load=load, bg_load=bg), scen, table)
+    assert cos.cosim_of is not None
+    bgm = np.asarray(cos.cosim_of) < 0
+    np.testing.assert_array_equal(cos.arrival_us[bgm], legacy.arrival_us)
+    np.testing.assert_array_equal(cos.size_bytes[bgm], legacy.size_bytes)
+    np.testing.assert_array_equal(cos.pair_id[bgm], legacy.pair_id)
+    np.testing.assert_array_equal(cos.flow_id[bgm], legacy.flow_id)
+    np.testing.assert_array_equal(cos.foreground[bgm], legacy.foreground)
+    np.testing.assert_array_equal(cos.dose_target, legacy.dose_target)
+    np.testing.assert_array_equal(cos.dose_real, legacy.dose_real)
+    # merged table stays arrival-sorted, and every plan row is present
+    assert (np.diff(cos.arrival_us) >= 0).all()
+    plan = build_plan(_spec(seed=seed, load=load, bg_load=bg), scen, table)
+    assert (~bgm).sum() == plan.num_rows
+    assert cos.foreground[~bgm].all()       # collectives are the workload
+
+
+def test_overlay_with_subflows_joins_singleton_parents():
+    """Under amp subflow generation the collective rows join as
+    singleton parents: parent-level metrics stay well-defined and the
+    background parent ids are untouched."""
+    scen, table = build_world(TOP)
+    legacy = make_flows(_spec(n_subflows=2, cosim_model=""), scen, table)
+    cos = make_flows(_spec(n_subflows=2), scen, table)
+    bgm = np.asarray(cos.cosim_of) < 0
+    np.testing.assert_array_equal(cos.subflow_of[bgm], legacy.subflow_of)
+    cs = cos.subflow_of[~bgm]
+    assert len(np.unique(cs)) == len(cs)            # singletons
+    assert cs.min() > legacy.subflow_of.max()
+
+
+# -------------------------------------------------------- defaults are inert
+def test_default_knobs_are_inert():
+    """cosim_model="" disables the overlay entirely — the flow table is
+    bit-for-bit the legacy generate() output (cosim_of absent), no
+    matter what the other cosim knobs say."""
+    scen, table = build_world(TOP)
+    base = make_flows(_spec(cosim_model=""), scen, table)
+    assert base.cosim_of is None
+    for kw in (dict(cosim_iters=11,), dict(cosim_compress=0),
+               dict(cosim_cell="train_4k")):
+        other = make_flows(_spec(cosim_model="", **kw), scen, table)
+        np.testing.assert_array_equal(base.arrival_us, other.arrival_us)
+        np.testing.assert_array_equal(base.flow_id, other.flow_id)
+        np.testing.assert_array_equal(base.size_bytes, other.size_bytes)
+
+
+@pytest.mark.parametrize("engine", ["fluid", "packet"])
+def test_default_knobs_engine_run_bit_identical(engine):
+    """Engine-level inertness for the pre-existing policies: a run with
+    default cosim knobs reproduces the pre-cosim simulation exactly —
+    every FCT, path choice and completion bit."""
+    specs = [ExpSpec(topology="testbed8", load=0.3, duration_us=50_000,
+                     seed=1, engine=engine, policy=pol, cosim_iters=it)
+             for pol in ("lcmp", "ecmp", "wcmp", "fatpaths")
+             for it in (6, 3)]       # cosim_iters moot while model=""
+    rep = sweep.run_sweep(specs, sequential=True)
+    for pol in ("lcmp", "ecmp", "wcmp", "fatpaths"):
+        a, b = [r for r in rep.results if r.spec.policy == pol]
+        assert np.array_equal(np.asarray(a.final.fct_us),
+                              np.asarray(b.final.fct_us))
+        assert np.array_equal(np.asarray(a.final.flow_path),
+                              np.asarray(b.final.flow_path))
+        assert np.array_equal(np.asarray(a.final.done),
+                              np.asarray(b.final.done))
+
+
+# ------------------------------------------------- cosim axes batch (sweep)
+@pytest.mark.parametrize("engine", ["fluid", "packet"])
+def test_cosim_axes_sweep_bit_for_bit(engine):
+    """The four cosim fields are dynamic axes: a grid mixing cosim
+    on/off, model, iters and compression (with matchrdma among the
+    policies) reproduces the sequential loop exactly on both engines."""
+    specs = [_spec(duration_us=50_000, engine=engine, policy=pol,
+                   cosim_model=m, cosim_iters=it, cosim_compress=cp)
+             for (m, it, cp) in (("", 4, 1), ("qwen3-4b", 4, 1),
+                                 ("qwen3-4b", 3, 0), ("gemma2-9b", 4, 1))
+             for pol in ("lcmp", "matchrdma")]
+    seq = sweep.run_sweep(specs, sequential=True)
+    bat = sweep.run_sweep(specs)
+    assert bat.num_cells == len(specs)
+    for a, b in zip(seq.results, bat.results):
+        assert np.array_equal(np.asarray(a.final.fct_us),
+                              np.asarray(b.final.fct_us)), b.spec
+        assert np.array_equal(np.asarray(a.final.done),
+                              np.asarray(b.final.done)), b.spec
+        assert np.array_equal(np.asarray(a.final.flow_path),
+                              np.asarray(b.final.flow_path)), b.spec
+
+
+# --------------------------------------------------------- matchrdma policy
+def test_matchrdma_picks_best_matched_rate():
+    import jax.numpy as jnp
+
+    from repro.core import baselines as bl
+    fids = jnp.arange(1, 65, dtype=jnp.uint32)
+    avail = jnp.array([10, 500, 40], jnp.int32)
+    valid = jnp.array([True, True, True])
+    assert (np.asarray(bl.matchrdma(fids, avail, valid)) == 1).all()
+    # an invalid candidate never wins, however fat its matched rate
+    choice = np.asarray(bl.matchrdma(
+        fids, avail, jnp.array([True, False, True])))
+    assert (choice == 2).all()
+    # no valid candidate -> -1 (engine drops the flow)
+    assert (np.asarray(bl.matchrdma(
+        fids, avail, jnp.zeros(3, bool))) == -1).all()
+    # ties break by flow-id hash rotation: deterministic, and spread
+    # across the tied candidates rather than herding on index 0
+    tied = np.asarray(bl.matchrdma(
+        fids, jnp.array([7, 7, 7], jnp.int32), valid))
+    assert len(np.unique(tied)) > 1
+    np.testing.assert_array_equal(tied, np.asarray(bl.matchrdma(
+        fids, jnp.array([7, 7, 7], jnp.int32), valid)))
+
+
+# ------------------------------------------------ iteration metrics (unit)
+def _tiny_plan(n_iters=2, nb=2, period=1000):
+    R = n_iters * nb
+    return CosimPlan(
+        model="m", cell="train_4k", n_iters=n_iters, n_buckets=nb,
+        pods=2, period_us=period, tokens_per_iter=1, param_count=1,
+        compressed=True,
+        arrival_us=np.array([i * period + 100 * b for i in range(n_iters)
+                             for b in range(nb)], np.int64),
+        size_bytes=np.full(R, 1e3), pair_id=np.zeros(R, np.int32),
+        flow_id=np.arange(1, R + 1, dtype=np.uint32),
+        iter_of=np.repeat(np.arange(n_iters, dtype=np.int32), nb),
+        bucket_of=np.tile(np.arange(nb, dtype=np.int32), n_iters),
+        phase_of=np.zeros(R, np.int8))
+
+
+def _fake_run(plan, done, fct_us, paths=None):
+    R = plan.num_rows
+    flows = SimpleNamespace(arrival_us=plan.arrival_us,
+                            cosim_of=np.arange(R, dtype=np.int32))
+    final = SimpleNamespace(done=np.asarray(done, bool),
+                            fct_us=np.asarray(fct_us, np.float64),
+                            flow_path=np.asarray(
+                                paths if paths is not None
+                                else np.zeros(R, np.int32)))
+    return flows, final
+
+
+def test_iteration_stats_barrier_semantics():
+    """An iteration's makespan is its straggler bucket's WALL completion
+    minus the iteration start (late-arriving fast buckets still gate);
+    one undelivered bucket voids the whole iteration."""
+    plan = _tiny_plan()
+    flows, final = _fake_run(plan, done=[True, True, True, False],
+                             fct_us=[50.0, 200.0, 60.0, 1.0])
+    it = iteration_stats(plan, flows, final)
+    # iter 0: max(0+50, 100+200) - 0 = 300 us
+    np.testing.assert_allclose(it.makespan_ms[0], 0.3)
+    assert np.isnan(it.makespan_ms[1])
+    assert it.iters_done == 1 and it.iters_total == 2
+    assert it.completion_rate == 0.5
+
+
+def test_pct_strict_charges_incomplete_iterations():
+    """The ordering metric counts a dropped iteration as +inf, never
+    excludes it — the policy that strands a step cannot win the
+    percentile by survivorship."""
+    plan = _tiny_plan()
+    flows, final = _fake_run(plan, done=[True, True, True, False],
+                             fct_us=[50.0, 200.0, 60.0, 1.0])
+    it = iteration_stats(plan, flows, final)
+    assert it.pct_strict(99) == np.inf
+    assert np.isfinite(it.pct_strict(1))
+    assert np.isclose(it.pct(50), 0.3)       # lenient pct: complete only
+    flows2, final2 = _fake_run(plan, [False] * 4, [0.0] * 4)
+    none_done = iteration_stats(plan, flows2, final2)
+    assert none_done.pct_strict(50) == np.inf      # inf, never NaN
+
+
+def test_straggler_attribution():
+    """The route carrying each iteration's slowest bucket is charged the
+    straggle; undelivered buckets dominate with +inf."""
+    plan = _tiny_plan()
+    flows, final = _fake_run(plan, done=[True, True, True, False],
+                             fct_us=[50.0, 200.0, 60.0, 1.0],
+                             paths=[7, 9, 7, 9])
+    routes = straggler_routes(plan, flows, final)
+    assert routes[9]["stragglers"] == 2        # both iterations
+    assert routes[7]["stragglers"] == 0
+    assert routes[9]["max_ms"] == np.inf
+    assert routes[7]["buckets"] == 2
+
+
+# ---------------------------------------- telemetry feedback loop (closing)
+@pytest.fixture
+def fresh_telemetry():
+    lc._TELEMETRY.reset()
+    yield lc._TELEMETRY
+    lc._TELEMETRY.reset()
+
+
+def test_feed_route_telemetry_demotes_slow_route(fresh_telemetry,
+                                                 monkeypatch):
+    """The closed loop: replaying a run where one simulated route
+    persistently straggles raises that route's congestion score until
+    ``schedule_buckets`` stops placing buckets on it — demotion driven
+    by measured (simulated) times, not synthetic wall clocks. C_PATH is
+    flattened so the (255-capped) congestion term decides the kept set
+    — the equal-cost parallel-haul case; see the dist_unit twin for
+    why the stock static spread cannot be out-voted."""
+    monkeypatch.setattr(lc, "C_PATH", np.zeros_like(lc.C_PATH))
+    tm = fresh_telemetry
+    n_iters, nb = 12, 3
+    plan = _tiny_plan(n_iters=n_iters, nb=nb, period=2000)
+    # bucket b of every iteration lands on global path 40+b; path 41
+    # (telemetry slot 1) is persistently slow, the rest are quick
+    paths = np.tile(np.array([40, 41, 42]), n_iters)
+    fct = np.where(paths == 41, 900e3, 50e3)
+    flows, final = _fake_run(plan, done=np.ones(plan.num_rows, bool),
+                             fct_us=fct, paths=paths)
+    slot = {40: 0, 41: 1, 42: 2}
+    before = tm.cong_scores().copy()
+    feed_route_telemetry(plan, flows, final, tm, path_slot=slot)
+    after = tm.cong_scores()
+    assert after[1] > before[1]
+    assert after[1] > max(after[0], after[2])
+    ids = lc._fmix32_host(np.arange(64, dtype=np.uint32))
+    assert 1 not in set(lc.schedule_buckets(ids).tolist())
+
+
+def test_feed_route_telemetry_undone_buckets_look_slow(fresh_telemetry):
+    """A route whose buckets never deliver registers at the 2x-period
+    horizon time — persistently failing routes must look slow, not
+    invisible to the scheduler."""
+    tm = fresh_telemetry
+    plan = _tiny_plan(n_iters=8, nb=2, period=200_000)
+    paths = np.tile(np.array([40, 41]), 8)
+    done = paths != 41                           # route 41 black-holes
+    flows, final = _fake_run(plan, done=done,
+                             fct_us=np.full(plan.num_rows, 50e3),
+                             paths=paths)
+    feed_route_telemetry(plan, flows, final, tm, path_slot={40: 0, 41: 1})
+    assert tm.cong_scores()[1] > tm.cong_scores()[0]
+
+
+def test_pair_path_slots_maps_candidates():
+    scen, table = build_world(TOP)
+    pid = table.pair_index()[scen.main_pair]
+    slots = pair_path_slots(table, pid)
+    assert len(slots) == int(table.pair_ncand[pid])
+    for g, k in slots.items():
+        assert int(table.pair_cand[pid, k]) == g

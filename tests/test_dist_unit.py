@@ -129,3 +129,42 @@ def test_telemetry_straggler_trend_raises_cong_score(fresh_telemetry):
     after = tm.cong_scores()
     assert after[1] > base[1]
     assert after[1] > after[0] and after[1] > after[2]
+
+
+def test_observe_measured_demotes_persistently_slow_route(fresh_telemetry,
+                                                          monkeypatch):
+    """The cosim feedback seam: feeding externally *measured* per-bucket
+    wall times (route 1 persistently slow) raises its congestion score
+    until ``schedule_buckets`` drops it from the low-cost half — the
+    demotion the synthetic wall clock used to drive now follows the
+    measurement plane. C_PATH is flattened to isolate the congestion
+    term: the stock three routes' static-cost spread (42/270/546 fused)
+    exceeds the 255-capped C_cong by design, so among THOSE routes
+    telemetry reorders preference inside the kept set but never evicts —
+    eviction needs near-tied static costs, which is what equal-cost
+    parallel hauls present."""
+    monkeypatch.setattr(lc, "C_PATH", np.zeros_like(lc.C_PATH))
+    tm = fresh_telemetry
+    ids = lc._fmix32_host(np.arange(64, dtype=np.uint32))
+    assert 1 in set(lc.schedule_buckets(ids).tolist())   # kept while quiet
+    for step in range(12):
+        tm.observe_measured(np.array([50, 900, 50, 880], np.int64),
+                            np.array([0, 1, 2, 1], np.int64), step)
+    scores = tm.cong_scores()
+    assert scores[1] > scores[0] and scores[1] > scores[2]
+    assert 1 not in set(lc.schedule_buckets(ids).tolist())
+
+
+def test_observe_measured_semantics(fresh_telemetry):
+    """Per-route sample = MAX over that route's buckets (barrier: the
+    straggler bucket is the route's observed time); routes with no
+    bucket this step hold their last sample; slot -1 buckets (routes the
+    telemetry does not register) are dropped; shape mismatches raise."""
+    tm = fresh_telemetry
+    tm.observe([100, 100, 100], step=0)
+    tm.observe_measured(np.array([200, 700, 33], np.int64),
+                        np.array([1, 1, -1], np.int64), step=1)
+    assert tm.cur.tolist() == [100, 700, 100]
+    with pytest.raises(ValueError):
+        tm.observe_measured(np.array([1, 2], np.int64),
+                            np.array([0], np.int64), step=2)

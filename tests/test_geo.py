@@ -190,7 +190,8 @@ def test_registry_wire_format_pinned():
     assert sched.FAMILIES == ("const", "diurnal", "flash")
     assert POLICY_CODES == {
         "lcmp": 0, "lcmp_w": 1, "ecmp": 2, "ucmp": 3, "wcmp": 4,
-        "redte": 5, "fatpaths": 6, "amp": 7, "lcmp_r": 8}
+        "redte": 5, "fatpaths": 6, "amp": 7, "lcmp_r": 8,
+        "matchrdma": 9}
     # geo's default parameterization is part of the pin: fig_geo rows
     # embed it, and the scenario string is the sweep static key
     scen = scenarios.get("geo")

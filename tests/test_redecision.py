@@ -25,7 +25,7 @@ def test_policy_codes_pinned():
     renumbering is a silent-corruption bug this pin catches."""
     assert POLICY_CODES == {
         "lcmp": 0, "lcmp_w": 1, "ecmp": 2, "ucmp": 3, "wcmp": 4,
-        "redte": 5, "fatpaths": 6, "amp": 7, "lcmp_r": 8,
+        "redte": 5, "fatpaths": 6, "amp": 7, "lcmp_r": 8, "matchrdma": 9,
     }
     assert REDECIDE_POLICIES == ("fatpaths", "lcmp_r")
 
