@@ -82,6 +82,12 @@ def collect() -> Dict[str, float]:
     rows["build_world_and_flows"] = (time.perf_counter() - t0) * 1e6
     rows.update(_scan_times("fluid"))
     rows.update(_scan_times("packet"))
+    # sanitizer cost center: the same scans under the checkify
+    # physics-invariant program (repro.netsim.sanitize) — the debug-mode
+    # overhead must stay visible so `checks=1` remains a usable knob
+    sanitize_spec = dict(_SPEC, checks=1)
+    rows.update(_scan_times("fluid", sanitize_spec, prefix="sanitize_"))
+    rows.update(_scan_times("packet", sanitize_spec, prefix="sanitize_"))
     # fig_geo cost centers: cold geo world (haversine + span expansion +
     # path enumeration) with a diurnal schedule (thinned arrivals), then
     # the fluid scan at geo scale

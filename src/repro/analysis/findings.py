@@ -45,6 +45,20 @@ CODES: Dict[str, str] = {
               "alias silently once an offset outgrows the ring)",
     "RNG002": "HIST build-time capacity guard not found (build() must "
               "validate max RTT / signal-delay offsets against HIST)",
+    "UNI001": "arithmetic/comparison mixes incompatible dimensions "
+              "(e.g. bytes with us) per the *_us/*_bytes/... naming "
+              "convention",
+    "UNI002": "same dimension, different scale: unconverted us/ms mixing "
+              "(divide or multiply by the conversion factor first)",
+    "UNI003": "compound unit mismatch: a derived quantity (rate x time, "
+              "bytes/us) meets a plain unit without conversion",
+    "UNI004": "assignment target's unit suffix contradicts the unit of "
+              "the assigned expression",
+    "INV001": "SimState/PacketState field mutated in the scan without a "
+              "registered runtime invariant or exemption in "
+              "repro.netsim.sanitize",
+    "INV002": "sanitizer registry rot: coverage/exemption key is not a "
+              "state field, or names an unknown invariant",
 }
 
 _IGNORE_RE = re.compile(r"#\s*reprolint:\s*ignore\[([A-Z0-9,\s]+)\]")

@@ -14,8 +14,10 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.analysis.astutil import CheckContext, RepoIndex
 from repro.analysis.axes import check_axes
 from repro.analysis.findings import Finding, apply_exemptions
+from repro.analysis.invariants import check_invariants
 from repro.analysis.rings import check_rings
 from repro.analysis.tracing import check_tracing
+from repro.analysis.units import check_units
 from repro.analysis.wire import check_wire
 
 CHECKS: Dict[str, Callable[[CheckContext], List[Finding]]] = {
@@ -23,6 +25,8 @@ CHECKS: Dict[str, Callable[[CheckContext], List[Finding]]] = {
     "axes": check_axes,
     "wire": check_wire,
     "rings": check_rings,
+    "units": check_units,
+    "invariants": check_invariants,
 }
 
 

@@ -12,6 +12,9 @@ cross-PR comparison surface:
   tracks the code, not a stale doc)
 - ``bench_keys``    — the ``meta`` / ``rows_us`` key sets of
   ``BENCH_netsim.json``
+- ``checker_codes`` — the reprolint finding-code catalog itself (codes
+  appear in CI annotations and exemption comments, so they are
+  advertised surface too)
 
 Any drift fails CI until the manifest is regenerated **in the same
 diff** (``python -m repro.analysis --write-manifest``), which turns a
@@ -26,7 +29,7 @@ import sys
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.analysis.astutil import CheckContext
-from repro.analysis.findings import Finding
+from repro.analysis.findings import CODES, Finding
 
 MANIFEST_REL = "src/repro/analysis/manifest.json"
 REGEN = "python -m repro.analysis --write-manifest"
@@ -88,6 +91,7 @@ def build_manifest(root: str) -> Dict:
         "csv_schemas": _csv_schemas(
             os.path.join(root, "benchmarks", "figures.py")),
         "bench_keys": bench,
+        "checker_codes": sorted(CODES),
     }
 
 

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.cosim.workload import CosimPlan
 from repro.dist.lcmp_collectives import RouteTelemetry
+from repro.netsim import sanitize
 from repro.netsim.metrics import completion_wall_us
 
 
@@ -92,6 +93,12 @@ def iteration_stats(plan: CosimPlan, flows, final) -> IterStats:
     last = np.zeros(plan.n_iters, np.float64)
     np.maximum.at(last, iters, np.where(done, wall, 0.0))
     mk = (last - plan.iter_start_us(np.arange(plan.n_iters))) / 1000.0
+    if sanitize.host_checks_enabled():
+        # barrier causality: no complete iteration finishes before it
+        # starts (would mean a bucket's wall completion predates arrival)
+        sanitize.host_check(bool(np.all(mk[all_done] >= 0.0)),
+                            "cosim barrier: iteration completes before "
+                            "its start")
     return IterStats(makespan_ms=np.where(all_done, mk, np.nan),
                      iters_total=plan.n_iters)
 

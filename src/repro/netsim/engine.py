@@ -191,6 +191,10 @@ class SimConfig:
     # amp only: subflows per flow (traffic/gen.py splits sizes; metrics
     # scores the parent flow at last-subflow completion)
     n_subflows: int = 1
+    # debug mode: thread the checkify physics-invariant sanitizer
+    # (repro.netsim.sanitize) through the scan. Static, so the unchecked
+    # program is bit-for-bit untouched when False (asserted in tests).
+    checks: bool = False
 
     @property
     def num_steps(self) -> int:

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Dict, Optional, Sequence
 
 from repro.netsim import engine as enginemod
@@ -63,6 +64,11 @@ class ExpSpec:
     cosim_cell: str = "train_4k"     # launch/shapes.py train cell
     cosim_iters: int = 6             # training iterations over duration_us
     cosim_compress: int = 1          # int8+scales wire (dist.compress)
+    # debug mode: thread the checkify physics-invariant sanitizer through
+    # the scan (repro.netsim.sanitize). Static axis — the checked program
+    # is a different trace; REPRO_CHECKS=1 in the environment forces it
+    # on for any spec (the CI sanitize smoke uses this).
+    checks: int = 0
     select: Optional[object] = None  # optional SelectParams override
     pathq: Optional[object] = None   # optional PathQParams override
     congp: Optional[object] = None   # optional CongParams override
@@ -78,7 +84,7 @@ class ExpSpec:
 AXES_STATIC = (
     "engine", "cc", "duration_us", "cap_scale", "sig_delay_scale",
     "ctrl_period_us", "flowlet_gap_us", "redecide_period_us",
-    "n_subflows", "select", "pathq", "congp",
+    "n_subflows", "checks", "select", "pathq", "congp",
 )
 AXES_DYNAMIC = (
     "workload", "load", "seed", "pairs", "bg_load", "load_sched",
@@ -178,6 +184,8 @@ def spec_to_cfg(spec: ExpSpec, scen: scenarios.Scenario) -> SimConfig:
                      flowlet_gap_us=spec.flowlet_gap_us,
                      redecide_period_us=spec.redecide_period_us,
                      n_subflows=spec.n_subflows,
+                     checks=bool(spec.checks)
+                     or os.environ.get("REPRO_CHECKS") == "1",
                      fail_sched=scen.fail_sched,
                      degrade_sched=scen.degrade_sched, **kw)
 

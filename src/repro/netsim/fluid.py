@@ -52,7 +52,7 @@ import jax.numpy as jnp
 
 # Shared multi-engine core — re-exported so `fluid.X` keeps working for
 # every name that predates the engine split.
-from repro.netsim import engine
+from repro.netsim import engine, sanitize
 from repro.netsim.engine import (  # noqa: F401
     ENGINES, HIST, POLICIES, POLICY_CODES, REDECIDE_POLICIES, _NEVER,
     SimArrays, SimConfig, SimState, _cc_update, _path_queue_wait,
@@ -67,6 +67,7 @@ name = "fluid"
 def make_step(ar: SimArrays, cfg: SimConfig):
     L = ar.link_cap.shape[0]
     dt = float(cfg.dt_us)
+    checks_on = sanitize.enabled(cfg)
 
     def step(st: SimState, t):
         # 0) failure injection + lazy fast-failover (paper §3.4): at a
@@ -159,6 +160,11 @@ def make_step(ar: SimArrays, cfg: SimConfig):
         # 7) RedTE periodic split-ratio re-optimization (shared tick)
         st = redte_tick(t, st, ar, cfg)
 
+        # 8) debug-mode physics invariants (Python gate: the unchecked
+        # trace carries no extra ops)
+        if checks_on:
+            st = sanitize.step_check(t, st, ar, cfg)
+
         return st, None
 
     return step
@@ -174,4 +180,13 @@ def run_impl(arrs: SimArrays, state: SimState, cfg: SimConfig) -> SimState:
 
 # jitted entry point for single experiments (the sweep engine jits its
 # own vmap of run_impl instead, one trace per cell group)
-run = jax.jit(run_impl, static_argnames=("cfg",))
+_run_jit = jax.jit(run_impl, static_argnames=("cfg",))
+
+
+def run(arrs: SimArrays, state: SimState, cfg: SimConfig) -> SimState:
+    """Single-experiment entry: the plain jit, or the checkify-wrapped
+    sanitizer program when ``cfg.checks`` is set (raises
+    ``checkify.JaxRuntimeError`` on an invariant violation)."""
+    if sanitize.enabled(cfg):
+        return sanitize.run_with_checks(run_impl, arrs, state, cfg)
+    return _run_jit(arrs, state, cfg)

@@ -12,6 +12,7 @@ from typing import Dict
 
 import numpy as np
 
+from repro.netsim import sanitize
 from repro.netsim.engine import SimArrays, SimConfig, SimState
 from repro.netsim.paths import PathTable
 from repro.traffic.gen import FlowSet
@@ -101,6 +102,17 @@ def fct_stats(final: SimState, table: PathTable, flows: FlowSet,
     ideal = prop + sizes / cap
     sl = fct[done] / ideal[done]
     offered = int(mask.sum()) if mask is not None else len(done)
+    if sanitize.host_checks_enabled():
+        # completion-accounting identity (host-side half of the
+        # completion_identity invariant)
+        sanitize.host_check(int(done.sum()) <= offered,
+                            "completion_identity: more completions than "
+                            "offered flows")
+        sanitize.host_check(bool((fct[done] > 0.0).all()),
+                            "completion_identity: completed flow with "
+                            "FCT <= 0")
+        sanitize.host_check(bool(np.isfinite(sl).all()),
+                            "completion_identity: non-finite slowdown")
     return FCTStats(slowdown=np.maximum(sl, 1.0), sizes=sizes[done],
                     completed=int(done.sum()), offered=offered)
 

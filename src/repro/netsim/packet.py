@@ -56,7 +56,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.netsim import engine
+from repro.netsim import engine, sanitize
 from repro.netsim.engine import (HIST, SimArrays, SimConfig, SimState,
                                  _cc_update, _reroute_dead, _route_arrivals,
                                  ctrl_tick, monitor_tick, redecide_tick,
@@ -130,6 +130,7 @@ def make_step(ar: SimArrays, cfg: SimConfig):
     buf = float(cfg.buffer_bytes * cfg.cap_scale)
     xoff = cfg.pfc_xoff_frac * buf
     xon = cfg.pfc_xon_frac * buf
+    checks_on = sanitize.enabled(cfg)
 
     def seg(vals, idx):
         return jax.ops.segment_sum(vals, idx, num_segments=L)
@@ -247,7 +248,12 @@ def make_step(ar: SimArrays, cfg: SimConfig):
                 has_next = jnp.zeros_like(okh)
                 lnextc = lh
                 paused_next = jnp.zeros_like(okh)
-            sendable = jnp.where(okh & ~paused_next, fq[:, h], 0.0)
+            # in checked mode the PFC send gate routes through the
+            # sanitizer seam (identity in production; the pfc_lossless
+            # mutation corrupts it to prove check_pfc fires)
+            gate = sanitize.pfc_gate(okh, paused_next) if checks_on \
+                else (okh & ~paused_next)
+            sendable = jnp.where(gate, fq[:, h], 0.0)
             demand = seg(sendable, lh)
             f_serv = jnp.minimum(1.0, jnp.clip(budget - served, 0.0, None)
                                  / jnp.maximum(demand, 1e-9))
@@ -258,6 +264,9 @@ def make_step(ar: SimArrays, cfg: SimConfig):
                                / jnp.maximum(offered_in, 1e-9))
             out = out * jnp.where(has_next, f_in[lnextc], 1.0)
             fwd = jnp.where(has_next, out, 0.0)
+            if checks_on:
+                # pfc_lossless: XOFF downstream => nothing forwarded
+                sanitize.check_pfc(fwd, paused_next)
             fq = fq.at[:, h].add(-out)
             if h + 1 < H:
                 fq = fq.at[:, h + 1].add(fwd)
@@ -313,6 +322,11 @@ def make_step(ar: SimArrays, cfg: SimConfig):
         # 8) RedTE periodic split-ratio re-optimization (shared tick)
         st = redte_tick(t, st, ar, cfg)
 
+        # 9) debug-mode physics invariants (Python gate: the unchecked
+        # trace carries no extra ops)
+        if checks_on:
+            st = sanitize.step_check(t, st, ar, cfg)
+
         return st, None
 
     return step
@@ -326,4 +340,13 @@ def run_impl(arrs: SimArrays, state: PacketState, cfg: SimConfig) -> PacketState
     return final
 
 
-run = jax.jit(run_impl, static_argnames=("cfg",))
+_run_jit = jax.jit(run_impl, static_argnames=("cfg",))
+
+
+def run(arrs: SimArrays, state: PacketState, cfg: SimConfig) -> PacketState:
+    """Single-experiment entry: the plain jit, or the checkify-wrapped
+    sanitizer program when ``cfg.checks`` is set (raises
+    ``checkify.JaxRuntimeError`` on an invariant violation)."""
+    if sanitize.enabled(cfg):
+        return sanitize.run_with_checks(run_impl, arrs, state, cfg)
+    return _run_jit(arrs, state, cfg)

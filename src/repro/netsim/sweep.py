@@ -47,7 +47,7 @@ import numpy as np
 import repro  # noqa: F401  (installs the jax.shard_map forward-compat alias)
 from repro.launch.mesh import make_host_mesh
 from repro.netsim import engine as enginemod
-from repro.netsim import fluid, metrics
+from repro.netsim import fluid, metrics, sanitize
 from repro.netsim.engine import SimArrays, SimState
 from repro.netsim.experiment import (ExpSpec, build_world, make_flows,
                                      run_experiment, spec_to_cfg)
@@ -177,6 +177,8 @@ def _group_runner(shared: SimArrays, cfg, mesh=None, mode: str = "vmap"):
         run_cells = jax.shard_map(run_cells, mesh=mesh,
                                   in_specs=(P("data"), P("data")),
                                   out_specs=P("data"), check_vma=False)
+    if sanitize.enabled(cfg):
+        return sanitize.checked_call(run_cells)
     return jax.jit(run_cells)
 
 

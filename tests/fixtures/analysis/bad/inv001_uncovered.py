@@ -1,0 +1,21 @@
+"""Bad: a SimState field is mutated inside the scan body but the
+sanitizer registries cover neither it nor an exemption."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class SimState:
+    remaining: jnp.ndarray
+
+
+def step(st, t):
+    st = dataclasses.replace(st, remaining=st.remaining - 1.0)
+    return st, None
+
+
+def run(st):
+    out, _ = jax.lax.scan(step, st, jnp.arange(8))
+    return out

@@ -1,0 +1,19 @@
+"""Bad: sanitizer registry rot — a coverage key that is not a state
+field (a field rename left the registry behind; the invariant name it
+references is real)."""
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class SimState:
+    q_depth: jnp.ndarray
+
+
+def _check_queue(st):
+    return (st.q_depth >= 0).all()
+
+
+INVARIANTS = {"queue_nonneg": _check_queue}
+INVARIANT_COVERAGE = {"q_deth": ("queue_nonneg",)}

@@ -1,0 +1,6 @@
+"""Bad: adds bytes to microseconds — incompatible dimensions under the
+*_us/*_bytes naming convention."""
+
+
+def total_cost(q_bytes, wait_us):
+    return q_bytes + wait_us

@@ -1,0 +1,6 @@
+"""Bad: compares microseconds against milliseconds without converting
+— same dimension, wrong scale (the classic silent 1000x)."""
+
+
+def deadline_hit(now_us, budget_ms):
+    return now_us > budget_ms

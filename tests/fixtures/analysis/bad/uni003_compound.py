@@ -1,0 +1,6 @@
+"""Bad: subtracts a rate x time product (gbps*us) straight from bytes
+— the compound quantity needs the gbps -> bytes/us conversion first."""
+
+
+def backlog(q_bytes, rate_gbps, dt_us):
+    return q_bytes - rate_gbps * dt_us

@@ -1,0 +1,7 @@
+"""Bad: binds a millisecond value to a *_us-named variable — the
+target's suffix contradicts the unit of the assigned expression."""
+
+
+def to_micro(span_ms):
+    span_us = span_ms
+    return span_us

@@ -1,0 +1,35 @@
+"""Good: explicit unit conversions (every cross-unit product goes
+through a literal conversion factor) and a complete sanitizer registry
+covering the one field the scan mutates."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class SimState:
+    remaining: jnp.ndarray
+
+
+def _check_bytes(st):
+    return (st.remaining >= 0).all()
+
+
+INVARIANTS = {"byte_conservation": _check_bytes}
+INVARIANT_COVERAGE = {"remaining": ("byte_conservation",)}
+COVERAGE_EXEMPT = {}
+
+
+def wait_total_us(queue_bytes, rate_gbps, budget_ms):
+    drain_us = queue_bytes / (rate_gbps * 125.0)   # gbps -> bytes/us
+    return drain_us + budget_ms * 1000.0           # ms -> us
+
+
+def step(st, t):
+    return dataclasses.replace(st, remaining=st.remaining - 1.0), None
+
+
+def run(st):
+    out, _ = jax.lax.scan(step, st, jnp.arange(4))
+    return out

@@ -27,6 +27,12 @@ BAD_EXPECT = {
     "axs001_missing.py": "AXS001",
     "axs002_dynamic_read.py": "AXS002",
     "axs003_static_unread.py": "AXS003",
+    "uni001_mix.py": "UNI001",
+    "uni002_scale.py": "UNI002",
+    "uni003_compound.py": "UNI003",
+    "uni004_suffix.py": "UNI004",
+    "inv001_uncovered.py": "INV001",
+    "inv002_rot.py": "INV002",
 }
 
 
@@ -77,7 +83,8 @@ def test_exemption_comment_suppresses(tmp_path):
 def test_unknown_check_name_rejected():
     with pytest.raises(ValueError, match="unknown check"):
         run_checks(REPO, checks=["nope"])
-    assert set(CHECKS) == {"tracing", "axes", "wire", "rings"}
+    assert set(CHECKS) == {"tracing", "axes", "wire", "rings",
+                           "units", "invariants"}
 
 
 # ------------------------------------------------------------------ CLI

@@ -1,0 +1,137 @@
+"""Runtime physics-invariant sanitizer (repro.netsim.sanitize).
+
+Three contracts:
+1. every seeded physics bug in the mutation corpus is caught, on both
+   engines, by the invariant that owns it (checkify reports the first
+   failing check, so the match also pins check ordering);
+2. the checked program computes the *same physics*: checks-on output is
+   bit-for-bit identical to checks-off (the sanitizer only observes);
+3. the knobs work — ``ExpSpec.checks``, the ``REPRO_CHECKS`` env
+   override, and the host-side accounting checks in ``metrics``.
+"""
+import dataclasses
+
+import jax
+import pytest
+from jax.experimental import checkify
+
+from mutations import MUTATIONS
+from repro.netsim import experiment, fluid, metrics, packet, sanitize
+
+SPEC = dict(topology="testbed8", load=0.7, duration_us=40_000)
+ENGINES = {"fluid": fluid, "packet": packet}
+
+
+def _build(engine_name, checks=True, **cfg_over):
+    spec = experiment.ExpSpec(engine=engine_name, checks=int(checks), **SPEC)
+    _, table, flows, cfg = experiment.build_experiment(spec)
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    mod = ENGINES[engine_name]
+    arrs, st = mod.build(table, flows, cfg)
+    return mod, arrs, st, cfg
+
+
+@pytest.fixture(autouse=True)
+def _fresh_checked_cache():
+    # the checked runner caches jit(checkify(run_impl)) per cfg; a
+    # mutation is baked into that trace, so tests must not share it
+    sanitize._checked_runner.cache_clear()
+    yield
+    sanitize._checked_runner.cache_clear()
+
+
+# ------------------------------------------------------ mutation corpus
+def test_mutation_corpus_covers_every_invariant():
+    # signal_causality/pfc_lossless are seeded via SimArrays / the
+    # pfc_gate seam below rather than a step-state corruptor
+    assert (set(MUTATIONS) | {"signal_causality", "pfc_lossless"}
+            == set(sanitize.INVARIANTS))
+
+
+@pytest.mark.parametrize("engine_name", sorted(ENGINES))
+@pytest.mark.parametrize("name", sorted(MUTATIONS))
+def test_seeded_bug_is_caught(engine_name, name, monkeypatch):
+    mod, arrs, st, cfg = _build(engine_name)
+    monkeypatch.setattr(sanitize, "_MUTATION", MUTATIONS[name])
+    with pytest.raises(checkify.JaxRuntimeError, match=name):
+        mod.run(arrs, st, cfg)
+
+
+@pytest.mark.parametrize("engine_name", sorted(ENGINES))
+def test_signal_causality_caught(engine_name):
+    mod, arrs, st, cfg = _build(engine_name)
+    bad = dataclasses.replace(arrs,
+                              path_sig_delay=-(arrs.path_sig_delay + 1))
+    with pytest.raises(checkify.JaxRuntimeError, match="signal_causality"):
+        mod.run(bad, st, cfg)
+
+
+def test_pfc_gate_break_is_caught(monkeypatch):
+    # all-pairs traffic into a buffer small enough that PFC pauses
+    # actually fire on downstream hops at this load
+    spec = experiment.ExpSpec(engine="packet", pairs="all", checks=1,
+                              **SPEC)
+    _, table, flows, cfg = experiment.build_experiment(spec)
+    cfg = dataclasses.replace(cfg, buffer_bytes=2e5)
+    mod = ENGINES["packet"]
+    arrs, st = mod.build(table, flows, cfg)
+    # honored gate: pauses occur, nothing is forwarded into them
+    mod.run(arrs, st, cfg)
+    # broken gate (ignores the pause signal): check_pfc must fire
+    monkeypatch.setattr(sanitize, "pfc_gate", lambda okh, paused: okh)
+    sanitize._checked_runner.cache_clear()
+    with pytest.raises(checkify.JaxRuntimeError, match="pfc_lossless"):
+        mod.run(arrs, st, cfg)
+
+
+# ------------------------------------------------- observation-only runs
+@pytest.mark.parametrize("engine_name", sorted(ENGINES))
+def test_checked_run_is_bit_identical(engine_name):
+    """The sanitizer only observes: the checks-on final state equals the
+    checks-off final state bit for bit, so debug mode can never change
+    a paper number."""
+    mod, arrs, st, cfg_on = _build(engine_name, checks=True)
+    cfg_off = dataclasses.replace(cfg_on, checks=False)
+    a = mod.run(arrs, st, cfg_off)
+    b = mod.run(arrs, st, cfg_on)
+    la = jax.tree.leaves(dataclasses.asdict(a))
+    lb = jax.tree.leaves(dataclasses.asdict(b))
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert (x == y).all(), "sanitizer perturbed simulation state"
+
+
+# ---------------------------------------------------------------- knobs
+def test_spec_checks_flag_reaches_cfg():
+    spec = experiment.ExpSpec(**SPEC)
+    _, _, _, cfg = experiment.build_experiment(spec)
+    assert cfg.checks is False
+    _, _, _, cfg = experiment.build_experiment(
+        dataclasses.replace(spec, checks=1))
+    assert cfg.checks is True
+
+
+def test_env_override_forces_checks_on(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECKS", "1")
+    _, _, _, cfg = experiment.build_experiment(experiment.ExpSpec(**SPEC))
+    assert cfg.checks is True
+
+
+def test_host_checks_catch_broken_completion_accounting(monkeypatch):
+    spec = experiment.ExpSpec(engine="fluid", **SPEC)
+    _, table, flows, cfg = experiment.build_experiment(spec)
+    arrs, st = fluid.build(table, flows, cfg)
+    final = fluid.run(arrs, st, cfg)
+    # a "completed" flow with FCT 0 — the accounting identity is broken
+    broken = dataclasses.replace(
+        final, done=final.done.at[:].set(True),
+        fct_us=final.fct_us.at[:].set(0.0))
+    # silent without the env knob (the default production path)...
+    metrics.fct_stats(broken, table, flows, cfg)
+    # ...and a hard failure with it
+    monkeypatch.setenv("REPRO_CHECKS", "1")
+    with pytest.raises(AssertionError, match="completion_identity"):
+        metrics.fct_stats(broken, table, flows, cfg)
+    metrics.fct_stats(final, table, flows, cfg)   # intact state passes
